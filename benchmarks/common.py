@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results"
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    """(result, best microseconds per call)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best
+
+
+def emit(rows: list[str], header: str | None = None) -> list[str]:
+    if header:
+        print(header)
+    for r in rows:
+        print(r)
+    return rows
+
+
+def save_csv(name: str, rows: list[str], header: str) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.csv").write_text("\n".join([header, *rows]) + "\n")

@@ -1,0 +1,32 @@
+"""Fig. 4 — average endurable failure count mu(N, r) by redundancy:
+closed form (Thm. 4.1) vs Monte-Carlo placement simulation."""
+from __future__ import annotations
+
+from repro.core.montecarlo import run_montecarlo
+from repro.core.theory import mu
+
+from .common import save_csv, timed
+
+HEADER = "name,us_per_call,derived"
+
+
+def run(quick: bool = True) -> list[str]:
+    rows = []
+    trials = 60 if quick else 1000
+    grid = {
+        200: ([3, 6, 9, 12] if quick else list(range(2, 13))),
+        600: ([4, 8, 14, 20] if quick else list(range(2, 21))),
+        1000: ([5, 9, 17, 26] if quick else list(range(2, 27))),
+    }
+    for n, rs in grid.items():
+        for r in rs:
+            res, us = timed(run_montecarlo, n, r, trials=trials, seed=1,
+                            repeat=1)
+            theory = mu(n, r)
+            err = abs(res.mean_failures - theory) / theory
+            rows.append(
+                f"fig4_mu[N={n} r={r}],{us:.0f},"
+                f"mc={res.mean_failures:.1f};theory={theory:.1f};"
+                f"rel_err={err:.3f}")
+    save_csv("fig4_mu", rows, HEADER)
+    return rows

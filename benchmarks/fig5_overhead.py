@@ -1,0 +1,29 @@
+"""Fig. 5 — average computation overhead by redundancy: SPARe's
+near-constant S_bar(N, r) (Thm. 4.2) vs traditional replication's r."""
+from __future__ import annotations
+
+from repro.core.montecarlo import run_montecarlo
+from repro.core.theory import s_bar, s_bar_lower
+
+from .common import save_csv, timed
+
+HEADER = "name,us_per_call,derived"
+
+
+def run(quick: bool = True) -> list[str]:
+    rows = []
+    trials = 60 if quick else 1000
+    for n in (200, 600, 1000):
+        rs = ([3, 9, 20] if quick else range(2, 21))
+        for r in rs:
+            if r * (r - 1) > n - 1:
+                continue
+            res, us = timed(run_montecarlo, n, r, trials=trials, seed=2,
+                            repeat=1)
+            rows.append(
+                f"fig5_overhead[N={n} r={r}],{us:.0f},"
+                f"mc_stack={res.mean_stack:.3f};"
+                f"eq6_lower={s_bar_lower(n, r):.3f};"
+                f"eq5_sbar={s_bar(n, r):.3f};replication={float(r):.1f}")
+    save_csv("fig5_overhead", rows, HEADER)
+    return rows

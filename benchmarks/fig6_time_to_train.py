@@ -1,0 +1,42 @@
+"""Fig. 6 — normalized time-to-train J(r): SPARe+CKPT vs Rep+CKPT from the
+discrete-event simulation, with the Eq.-7 theory curve."""
+from __future__ import annotations
+
+from repro.core.theory import j_normalized
+from repro.des import DESParams, simulate_replication, simulate_spare
+
+from .common import save_csv, timed
+
+HEADER = "name,us_per_call,derived"
+
+
+def run(quick: bool = True) -> list[str]:
+    rows = []
+    steps = 1200 if quick else 10_000
+    seeds = (0,) if quick else (0, 1, 2)
+    ns = (200,) if quick else (200, 600, 1000)
+    for n in ns:
+        p = DESParams(n=n, steps=steps)
+        for r in (2, 3, 4, 6):
+            vals = []
+            us = 0.0
+            for s in seeds:
+                res, t = timed(simulate_replication, p, r, seed=s, repeat=1)
+                vals.append(res.ttt_norm)
+                us += t
+            rows.append(
+                f"fig6_rep[N={n} r={r}],{us / len(seeds):.0f},"
+                f"ttt={sum(vals) / len(vals):.3f}")
+        for r in (2, 3, 4, 6, 9, 12):
+            vals = []
+            us = 0.0
+            for s in seeds:
+                res, t = timed(simulate_spare, p, r, seed=s, repeat=1)
+                vals.append(res.ttt_norm)
+                us += t
+            rows.append(
+                f"fig6_spare[N={n} r={r}],{us / len(seeds):.0f},"
+                f"ttt={sum(vals) / len(vals):.3f};"
+                f"theory_J={j_normalized(r, n):.3f}")
+    save_csv("fig6_time_to_train", rows, HEADER)
+    return rows

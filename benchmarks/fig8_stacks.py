@@ -1,0 +1,28 @@
+"""Fig. 8 — average stacks computed per training step (empirical
+computation overhead) vs the Eq.-5 prediction; paper reports <= 4 %
+absolute error."""
+from __future__ import annotations
+
+from repro.core.theory import s_bar
+from repro.des import DESParams, simulate_spare
+
+from .common import save_csv, timed
+
+HEADER = "name,us_per_call,derived"
+
+
+def run(quick: bool = True) -> list[str]:
+    rows = []
+    steps = 1200 if quick else 10_000
+    ns = (200,) if quick else (200, 600, 1000)
+    for n in ns:
+        p = DESParams(n=n, steps=steps)
+        for r in (3, 6, 9, 12):
+            res, us = timed(simulate_spare, p, r, seed=0, repeat=1)
+            pred = s_bar(n, r)
+            rows.append(
+                f"fig8_stacks[N={n} r={r}],{us:.0f},"
+                f"sim={res.avg_stacks:.3f};eq5={pred:.3f};"
+                f"abs_err={abs(res.avg_stacks - pred):.3f}")
+    save_csv("fig8_stacks", rows, HEADER)
+    return rows

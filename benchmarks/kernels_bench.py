@@ -1,0 +1,65 @@
+"""Kernel microbenchmarks: Pallas (interpret=CPU semantics) vs pure-jnp
+reference wall time and agreement. On TPU the same harness times the
+Mosaic-compiled kernels (interpret=False)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import flash_attention, rmsnorm, ssd_scan
+from repro.kernels.ref import flash_attention_ref, rmsnorm_ref, ssd_scan_ref
+
+from .common import save_csv, timed
+
+HEADER = "name,us_per_call,derived"
+
+
+def run(quick: bool = True) -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # flash attention
+    b, h, kv, s, d = 1, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, kv, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, kv, s, d)), jnp.bfloat16)
+    out, us_k = timed(lambda: flash_attention(q, k, v, interpret=True
+                                              ).block_until_ready(), repeat=2)
+    ref, us_r = timed(lambda: flash_attention_ref(q, k, v
+                                                  ).block_until_ready(),
+                      repeat=2)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max())
+    rows.append(f"kernel[flash {b}x{h}x{s}x{d}],{us_k:.0f},"
+                f"ref_us={us_r:.0f};max_err={err:.2e}")
+
+    # ssd scan
+    b, h, g, s, p, n = 1, 4, 1, 512, 64, 128
+    x = jnp.asarray(rng.normal(size=(b, h, s, p)), jnp.bfloat16)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, h, s)), jnp.float32)
+    a_log = jnp.asarray(np.log(np.arange(1, h + 1)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, g, s, n)), jnp.bfloat16)
+    cc = jnp.asarray(rng.normal(size=(b, g, s, n)), jnp.bfloat16)
+    (y, _), us_k = timed(lambda: ssd_scan(x, dt, a_log, bb, cc,
+                                          interpret=True), repeat=2)
+    (yr, _), us_r = timed(lambda: ssd_scan_ref(
+        x, dt, -jnp.exp(a_log), jnp.repeat(bb, h // g, 1),
+        jnp.repeat(cc, h // g, 1)), repeat=2)
+    err = float(jnp.abs(y.astype(jnp.float32)
+                        - yr.astype(jnp.float32)).max())
+    rows.append(f"kernel[ssd {b}x{h}x{s}x{p}x{n}],{us_k:.0f},"
+                f"ref_us={us_r:.0f};max_err={err:.2e}")
+
+    # rmsnorm
+    x2 = jnp.asarray(rng.normal(size=(4096, 2048)), jnp.bfloat16)
+    w = jnp.ones((2048,), jnp.float32)
+    o, us_k = timed(lambda: rmsnorm(x2, w, interpret=True
+                                    ).block_until_ready(), repeat=2)
+    orf, us_r = timed(lambda: rmsnorm_ref(x2, w).block_until_ready(),
+                      repeat=2)
+    err = float(jnp.abs(o.astype(jnp.float32)
+                        - orf.astype(jnp.float32)).max())
+    rows.append(f"kernel[rmsnorm 4096x2048],{us_k:.0f},"
+                f"ref_us={us_r:.0f};max_err={err:.2e}")
+    save_csv("kernels_bench", rows, HEADER)
+    return rows

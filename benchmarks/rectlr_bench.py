@@ -1,0 +1,40 @@
+"""RECTLR controller latency microbenchmark (App. D claims sub-100 ms at
+N ~ 1e3 — we measure the actual phases on realistic failure trails)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Rectlr, SpareState
+
+from .common import save_csv
+
+HEADER = "name,us_per_call,derived"
+
+
+def run(quick: bool = True) -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for n, r in ((200, 9), (600, 8), (1000, 10)):
+        for binary in (False, True):
+            st, ctl = SpareState(n, r), Rectlr(binary_search=binary)
+            times, hk_calls, reorders = [], 0, 0
+            k_max = int(0.4 * n)
+            order = rng.permutation(n)[:k_max]
+            for w in order:
+                out = ctl.on_failures(st, [int(w)])
+                if out.wipeout:
+                    break
+                times.append(out.controller_seconds)
+                hk_calls += out.hk_free_calls
+                reorders += int(out.reordered)
+            mean_us = float(np.mean(times)) * 1e6
+            p99_us = float(np.quantile(times, 0.99)) * 1e6
+            rows.append(
+                f"rectlr[N={n} r={r} bs={int(binary)}],{mean_us:.0f},"
+                f"p99_us={p99_us:.0f};events={len(times)};"
+                f"reorders={reorders};hk_calls={hk_calls};"
+                f"paper_budget_us=100000")
+    save_csv("rectlr_bench", rows, HEADER)
+    return rows

@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.render_tables [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).parent / "results" / "dryrun"
+
+
+def rows(mesh: str, variant: str = "baseline"):
+    out = []
+    for f in sorted(glob.glob(str(DRYRUN / f"*__{mesh}__{variant}.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def roofline_table(mesh: str) -> str:
+    lines = [
+        "| arch | shape | peak GiB | useful | compute s | memory s (lb-ub) "
+        "| collective s | bottleneck | roofline frac (ub / lb) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows(mesh), key=lambda r: (r["arch"], r["shape"])):
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| skip (long-context) | — |")
+            continue
+        t = r["roofline"]
+        useful_s = r["model_flops_per_device"] / 197e12
+        dom_ub = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        dom_lb = max(t["compute_s"], t["memory_lb_s"], t["collective_s"])
+        frac_ub = useful_s / dom_ub if dom_ub else 0
+        frac_lb = useful_s / dom_lb if dom_lb else 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['peak_bytes'] / 2**30:.1f} "
+            f"| {r['useful_flops_ratio']:.2f} | {t['compute_s']:.2f} "
+            f"| {t['memory_lb_s']:.1f}–{t['memory_s']:.1f} "
+            f"| {t['collective_s']:.2f} | {r['bottleneck'].replace('_s', '')} "
+            f"| {frac_ub:.3f} / {frac_lb:.3f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | 16x16 | 2x16x16 | compile s (sp/mp) "
+        "| peak GiB (sp/mp) |",
+        "|---|---|---|---|---|---|",
+    ]
+    sp = {(r["arch"], r["shape"]): r for r in rows("16x16")}
+    mp = {(r["arch"], r["shape"]): r for r in rows("2x16x16")}
+    for key in sorted(sp):
+        a, b = sp[key], mp.get(key, {})
+        def st(r):
+            if not r:
+                return "—"
+            return "SKIP" if r.get("skipped") else ("OK" if r.get("ok")
+                                                    else "FAIL")
+        cs = (f"{a.get('compile_s', 0):.0f}/{b.get('compile_s', 0):.0f}"
+              if not a.get("skipped") else "—")
+        pk = (f"{a.get('peak_bytes', 0) / 2**30:.1f}/"
+              f"{b.get('peak_bytes', 0) / 2**30:.1f}"
+              if not a.get("skipped") else "—")
+        lines.append(f"| {key[0]} | {key[1]} | {st(a)} | {st(b)} "
+                     f"| {cs} | {pk} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--what", default="both",
+                    choices=["roofline", "dryrun", "both"])
+    args = ap.parse_args()
+    if args.what in ("dryrun", "both"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table())
+        print()
+    if args.what in ("roofline", "both"):
+        print(f"### Roofline ({args.mesh})\n")
+        print(roofline_table(args.mesh))

@@ -1,0 +1,49 @@
+"""§Roofline report — three-term roofline per (arch x shape) from the
+dry-run artifacts (single-pod mesh per the spec; multi-pod proves the pod
+axis shards and is reported in §Dry-run).
+
+Reads ``benchmarks/results/dryrun/*.json``. Re-run the sweep with
+``bash benchmarks/run_dryrun_sweep.sh`` if stale.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from .common import save_csv
+
+HEADER = "name,us_per_call,derived"
+DRYRUN = Path(__file__).parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16", variant: str = "baseline") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(str(DRYRUN / f"*__{mesh}__{variant}.json"))):
+        r = json.load(open(f))
+        if r.get("ok") and not r.get("skipped"):
+            cells.append(r)
+    return cells
+
+
+def run(quick: bool = True) -> list[str]:
+    rows = []
+    cells = load_cells()
+    if not cells:
+        return [("roofline[missing],0,run benchmarks/run_dryrun_sweep.sh "
+                 "first")]
+    for r in cells:
+        t = r["roofline"]
+        dom = r["bottleneck"]
+        total = max(t.values())
+        frac = {k: v / total for k, v in t.items()}
+        rows.append(
+            f"roofline[{r['arch']}|{r['shape']}],{r.get('compile_s', 0) * 1e6:.0f},"
+            f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+            f"collective_s={t['collective_s']:.4f};bottleneck={dom};"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+            f"peak_gib={r['peak_bytes'] / 2**30:.2f};"
+            f"balance={frac['compute_s']:.2f}/{frac['memory_s']:.2f}/"
+            f"{frac['collective_s']:.2f}")
+    save_csv("roofline", rows, HEADER)
+    return rows

@@ -1,0 +1,68 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (also saved under
+``benchmarks/results/*.csv``). ``--full`` uses the paper-scale settings
+(10k-step DES horizons, 1000-trial Monte-Carlo) — hours on CPU;
+the default quick mode validates every claim at reduced scale in
+minutes.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    fig4_mu,
+    fig5_overhead,
+    fig6_time_to_train,
+    fig7_availability,
+    fig8_stacks,
+    kernels_bench,
+    rectlr_bench,
+    roofline,
+    table2_min_ttt,
+    tables_c_montecarlo,
+)
+
+SUITES = {
+    "fig4": fig4_mu,
+    "fig5": fig5_overhead,
+    "fig6": fig6_time_to_train,
+    "fig7": fig7_availability,
+    "fig8": fig8_stacks,
+    "table2": table2_min_ttt,
+    "tablesC": tables_c_montecarlo,
+    "rectlr": rectlr_bench,
+    "kernels": kernels_bench,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale horizons/trials (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+
+    names = (args.only.split(",") if args.only else list(SUITES))
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in names:
+        if name not in SUITES:
+            print(f"# unknown suite {name!r}; have {sorted(SUITES)}",
+                  file=sys.stderr)
+            continue
+        t1 = time.time()
+        for row in SUITES[name].run(quick=not args.full):
+            print(row)
+        print(f"# {name} done in {time.time() - t1:.1f}s", file=sys.stderr)
+    print(f"# all suites done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

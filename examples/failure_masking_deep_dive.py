@@ -1,0 +1,62 @@
+"""Deep dive: watch RECTLR (Alg. 2) react to a failure trail.
+
+Reproduces the paper's Fig. 3 walkthrough (N=9, r=3) then drives a larger
+(N=32, r=5) system through a full random failure trail until wipe-out,
+printing per-event controller decisions — and verifies the §3.1 gradient
+invariant at every stage against a vanilla-DP oracle.
+
+Run:  PYTHONPATH=src python examples/failure_masking_deep_dive.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import Rectlr, SpareState
+from repro.core.theory import capacity, mu
+from repro.train.trainer import SpareTrainer
+
+# ---------------------------------------------------------------- #
+print("== paper Fig. 3 walkthrough: N=9, r=3 ==")
+st, ctl = SpareState(9, 3), Rectlr()
+print(f"(b) no failures: all types collectible at stack {st.s_a}")
+ctl.on_failures(st, [1])
+print(f"(c) group 1 fails -> all-reduce stack {st.s_a}")
+out = ctl.on_failures(st, [2])
+print(f"(e) group 2 fails -> reordered={out.reordered}, stack stays "
+      f"{st.s_a} (Fig. 3e: reorder instead of 3rd stack), "
+      f"moves={out.moves}")
+
+# ---------------------------------------------------------------- #
+print("\n== random failure trail: N=32, r=5 "
+      f"(theory: masks ~{mu(32, 5):.0f} failures) ==")
+st, ctl = SpareState(32, 5), Rectlr()
+rng = np.random.default_rng(0)
+k = 0
+for w in rng.permutation(32):
+    out = ctl.on_failures(st, [int(w)])
+    k += 1
+    if out.wipeout:
+        print(f"k={k:2d}: group {w:2d} FAILS -> WIPE-OUT (global restart)")
+        break
+    tag = ("reorder" if out.reordered else "ok     ")
+    print(f"k={k:2d}: group {w:2d} fails -> {tag} S_A={st.s_a} "
+          f"(c(k)={capacity(k, 32)}) patches={out.patch_count} "
+          f"moves={out.moves} hk_calls={out.hk_free_calls} "
+          f"[{out.controller_seconds * 1e3:.2f} ms]")
+
+# ---------------------------------------------------------------- #
+print("\n== gradient invariant under failures (vs vanilla-DP oracle) ==")
+cfg = smoke_config("glm4-9b").scaled(grad_accum=1)
+tr = SpareTrainer(cfg, n_groups=8, redundancy=3, seq=32, per_type_batch=2)
+ref = tr.vanilla_reference_grads(0)
+for failures in ([], [2], [5], [7]):
+    if failures:
+        tr.ctl.on_failures(tr.state, failures)
+    got = tr.spare_grads(0)
+    diff = jax.tree.reduce(max, jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        ref, got))
+    print(f"after failing {failures or 'nobody'}: S_A={tr.state.s_a}, "
+          f"max |g_spare - g_vanilla| = {diff:.2e}")

@@ -1,0 +1,36 @@
+"""Quickstart: SPARe in 60 lines.
+
+Builds a tiny decoder-only LM, wraps it in the SPARe trainer with N=8
+data-parallel groups at redundancy r=3, injects failures every ~3 steps,
+and shows training sailing through them without global restarts.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.theory import mu, r_star, s_bar
+from repro.train.trainer import PoissonInjector, SpareTrainer
+
+N, R = 8, 3
+
+print(f"SPARe(N={N}, r={R}): masks ~{mu(N, R):.1f} failures before the "
+      f"first wipe-out at ~{s_bar(N, R):.2f}x compute "
+      f"(traditional replication would pay {R}x). Thm-4.3 optimal r* "
+      f"for N={N}: {r_star(N)}")
+
+cfg = smoke_config("qwen2.5-3b").scaled(grad_accum=1)
+trainer = SpareTrainer(cfg, n_groups=N, redundancy=R, seq=64,
+                       per_type_batch=2, ckpt_dir="/tmp/spare_quickstart",
+                       total_steps=60)
+
+report = trainer.run(40, injector=PoissonInjector(3.0, seed=0))
+
+print(f"\ncompleted {report.steps_done} steps "
+      f"(loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f})")
+print(f"failures injected : {report.failures}")
+print(f"wipe-outs (global restarts): {report.wipeouts}")
+print(f"reorders / patch computes  : {report.reorders} / {report.patches}")
+print(f"final all-reduce stack S_A : {trainer.state.s_a}")
+print(f"survivors: {trainer.state.alive.sum()}/{N}")
+print(f"RECTLR total time: {report.controller_seconds * 1e3:.1f} ms")

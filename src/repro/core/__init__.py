@@ -1,0 +1,32 @@
+"""SPARe core — the paper's primary contribution as a composable module.
+
+Layers:
+
+* :mod:`repro.core.golomb`    — cyclic Golomb-ruler shard placement (Def. B.1)
+* :mod:`repro.core.matching`  — Hopcroft-Karp / incremental matching / MCMF
+* :mod:`repro.core.state`     — Alg. 1 protocol state (stacks, survivors, S_A)
+* :mod:`repro.core.rectlr`    — Alg. 2 reordering controller (3 phases)
+* :mod:`repro.core.theory`    — Thms. 4.1-4.3 closed forms, Eqs. 1-2, 7-8
+* :mod:`repro.core.montecarlo`— App. C validation driver
+"""
+from .golomb import golomb_ruler, host_sets, type_sets, validate_placement
+from .rectlr import Rectlr, RectlrOutcome
+from .state import SpareState
+from .theory import (
+    SystemTimes,
+    availability_star,
+    capacity,
+    j_normalized,
+    mu,
+    r_star,
+    s_bar,
+    s_bar_lower,
+    tc_star,
+)
+
+__all__ = [
+    "golomb_ruler", "host_sets", "type_sets", "validate_placement",
+    "SpareState", "Rectlr", "RectlrOutcome",
+    "mu", "s_bar", "s_bar_lower", "capacity", "tc_star",
+    "availability_star", "j_normalized", "r_star", "SystemTimes",
+]

@@ -1,0 +1,117 @@
+"""Monte-Carlo validation of Thms. 4.1 / 4.2 (paper App. C, Tables 4-6).
+
+Emulates trails of random independent group failures over the cyclic-Golomb
+placement and measures, per trial:
+
+* ``F`` — failure count at first wipe-out (validates ``mu(N, r)``);
+* the minimal feasible all-reduce stack ``S(U_k)`` after each failure
+  (validates the Eq. 6 lower bound of ``S_bar``).
+
+Feasibility at depth ``s`` is maintained *incrementally* with
+:class:`repro.core.matching.IncrementalMatcher` — rebuilding Hopcroft-Karp
+from scratch for each of the ~700 failures x 1000 trials at N=1000 would
+dominate the run time; equivalence of the incremental matcher with full HK
+is property-tested in ``tests/test_matching.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .golomb import host_sets
+from .matching import IncrementalMatcher
+from .theory import capacity
+
+__all__ = ["McResult", "run_trial", "run_montecarlo"]
+
+
+@dataclass
+class McResult:
+    n: int
+    r: int
+    trials: int
+    mean_failures: float           # Monte-Carlo E[F]
+    mean_stack: float              # Monte-Carlo E[S(U_k)] averaged over k
+    failures: list[int] = field(default_factory=list, repr=False)
+    stacks_per_k: list[float] = field(default_factory=list, repr=False)
+
+
+def run_trial(n: int, r: int, rng: np.random.Generator,
+              hosts: np.ndarray | None = None) -> tuple[int, list[int]]:
+    """One failure trail: kill groups in a uniformly random order until the
+    first wipe-out; record the minimal feasible depth after each failure.
+
+    Returns ``(F, depths)`` where ``depths[k]`` is ``S(U_{k+1})`` — the depth
+    needed after the ``(k+1)``-th failure (``len(depths) == F - 1``; the
+    ``F``-th failure is the wipe-out itself, at which no depth is feasible).
+    """
+    if hosts is None:
+        hosts = host_sets(n, r)
+    order = rng.permutation(n)
+    host_alive = np.full(n, r, dtype=np.int64)  # surviving hosts per type
+
+    matcher = IncrementalMatcher(hosts, n, depth=1)
+    ok = matcher.initialise()
+    assert ok, "depth-1 matching must exist before any failure (cyclic cover)"
+
+    depths: list[int] = []
+    for k, w in enumerate(order, start=1):
+        w = int(w)
+        # wipe-out check first (cheap counter update)
+        types_of_w = np.flatnonzero((hosts == w).any(axis=1))
+        host_alive[types_of_w] -= 1
+        if (host_alive[types_of_w] == 0).any():
+            return k, depths
+        displaced = matcher.fail_group(w)
+        depth = matcher.min_feasible_depth(displaced, r)
+        assert depth is not None, "no wipe-out but infeasible at depth r"
+        # the matcher's depth only grows; c(k) says the true minimum may be
+        # smaller than the matcher's sticky depth — rebuild when the
+        # capacity bound is lower than what we are currently using.
+        c_k = capacity(k, n)
+        if depth > c_k:
+            fresh = IncrementalMatcher(hosts, n, depth=c_k)
+            fresh.alive = matcher.alive.copy()
+            fresh.cap = [c_k if a else 0 for a in fresh.alive]
+            if fresh.initialise():
+                depth = c_k
+                matcher = fresh
+            else:
+                d2 = c_k
+                while d2 < depth:
+                    d2 += 1
+                    fresh2 = IncrementalMatcher(hosts, n, depth=d2)
+                    fresh2.alive = matcher.alive.copy()
+                    fresh2.cap = [d2 if a else 0 for a in fresh2.alive]
+                    if fresh2.initialise():
+                        matcher = fresh2
+                        depth = d2
+                        break
+        depths.append(depth)
+    return n, depths  # all groups failed without wipe-out (r = N corner)
+
+
+def run_montecarlo(n: int, r: int, trials: int = 200, seed: int = 0) -> McResult:
+    """Paper App. C experiment: ``trials`` independent failure trails."""
+    import sys
+    # Kuhn eviction chains recurse one frame per displaced type; at
+    # N=1000, r~26 the worst chain exceeds CPython's default 1000 frames
+    if sys.getrecursionlimit() < 4 * n + 100:
+        sys.setrecursionlimit(4 * n + 100)
+    rng = np.random.default_rng(seed)
+    hosts = host_sets(n, r)
+    failures: list[int] = []
+    stack_means: list[float] = []
+    for _ in range(trials):
+        f, depths = run_trial(n, r, rng, hosts)
+        failures.append(f)
+        if depths:
+            stack_means.append(float(np.mean(depths)))
+    return McResult(
+        n=n, r=r, trials=trials,
+        mean_failures=float(np.mean(failures)),
+        mean_stack=float(np.mean(stack_means)) if stack_means else 1.0,
+        failures=failures,
+        stacks_per_k=stack_means,
+    )

@@ -1,0 +1,3 @@
+from .pipeline import ShardedTokenPipeline, spare_batch
+
+__all__ = ["ShardedTokenPipeline", "spare_batch"]

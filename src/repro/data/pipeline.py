@@ -1,0 +1,94 @@
+"""Deterministic synthetic data pipeline with SPARe shard-type mapping.
+
+The unit of SPARe accounting is the *shard type*: type ``i`` at step ``t``
+is a fixed, reproducible microbatch (the paper's 256M-token "stack"; here
+scaled to the configured batch). Determinism is the property SPARe
+actually relies on — whichever surviving group computes type ``i``, it
+must see the *same* tokens, or reordering would change the gradient. We
+derive every token from ``hash(type, step, position)`` via counter-based
+`Philox` so any host can materialize any shard without coordination.
+
+:func:`spare_batch` assembles the *global* stacked batch for one training
+step from a :class:`repro.core.SpareState` schedule: group ``w``'s slice
+of stack ``j`` carries shard type ``stk[w][j]`` and weight
+``1/N``-if-supplier-else-``0`` (paper §3.1 invariant — the weighted psum
+equals vanilla DP's gradient exactly; property-tested).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.state import SpareState
+from repro.models.config import ModelConfig
+
+__all__ = ["ShardedTokenPipeline", "spare_batch"]
+
+
+class ShardedTokenPipeline:
+    """Reproducible token stream: (type, step) -> (per_type_batch, seq+1)."""
+
+    def __init__(self, cfg: ModelConfig, seq: int, per_type_batch: int,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.seq = seq
+        self.per_type_batch = per_type_batch
+        self.seed = seed
+
+    def shard(self, shard_type: int, step: int) -> np.ndarray:
+        """Tokens (per_type_batch, seq+1) for one shard type at one step."""
+        rng = np.random.Generator(np.random.Philox(
+            key=self.seed, counter=[shard_type, step, 0, 0]))
+        return rng.integers(0, self.cfg.vocab,
+                            (self.per_type_batch, self.seq + 1),
+                            dtype=np.int32)
+
+    def embeds(self, shard_type: int, step: int) -> np.ndarray:
+        """Frontend-stub embeddings (audio frames / vision patches)."""
+        rng = np.random.Generator(np.random.Philox(
+            key=self.seed + 1, counter=[shard_type, step, 0, 0]))
+        return rng.standard_normal(
+            (self.per_type_batch, self.seq, self.cfg.d_model)
+        ).astype(np.float32) * 0.02
+
+
+def spare_batch(pipeline: ShardedTokenPipeline, state: SpareState,
+                step: int) -> dict[str, np.ndarray]:
+    """Global stacked batch for the current SPARe schedule.
+
+    Returns dict with:
+      tokens/embeds: (S_A, N*per_type_batch, seq[(+1 tokens)])
+      labels:        (S_A, N*per_type_batch, seq)
+      weights:       (S_A, N*per_type_batch)  — per-example supplier weight,
+                     scaled so a plain sum of weighted per-example mean-CE
+                     gradients equals vanilla DP's batch-mean gradient.
+    """
+    n = state.n
+    ptb = pipeline.per_type_batch
+    stack_types, wts = state.device_schedule()       # (N,S_A), (N,S_A)
+    s_a = state.s_a
+    use_embeds = pipeline.cfg.frontend is not None
+
+    toks = np.zeros((s_a, n * ptb, pipeline.seq + 1), np.int32)
+    embeds = (np.zeros((s_a, n * ptb, pipeline.seq, pipeline.cfg.d_model),
+                       np.float32) if use_embeds else None)
+    weights = np.zeros((s_a, n * ptb), np.float64)
+    for w in range(n):
+        sl = slice(w * ptb, (w + 1) * ptb)
+        for j in range(s_a):
+            t = int(stack_types[w, j])
+            toks[j, sl] = pipeline.shard(t, step)
+            if use_embeds:
+                embeds[j, sl] = pipeline.embeds(t, step)
+            # per-example weight: supplier weight (1/N or 0) divided by the
+            # per-type batch so sum_jb pw * CE_b == (1/N) sum_i mean_i(CE)
+            # == vanilla DP's batch-mean loss
+            weights[j, sl] = wts[w, j] / ptb
+    batch = {
+        "labels": toks[:, :, 1:],
+        "weights": weights.astype(np.float32),
+    }
+    if use_embeds:
+        batch["embeds"] = embeds
+    else:
+        batch["tokens"] = toks[:, :, :-1]
+    return batch

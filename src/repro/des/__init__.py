@@ -1,0 +1,22 @@
+"""Discrete-event simulation of restart-dominant LLM pretraining (paper Sec. 5).
+
+A SimGrid-equivalent DES specialized to the bulk-synchronous training
+timeline: compute phases, gradient all-reduces, failure injection (Weibull,
+exponentially distributed alternatives), communicator shrink, RECTLR,
+patch computes, checkpoint saves, rework, and global restarts — with the
+paper's Table 1 parameters for a 600k-H100 cluster as defaults.
+
+Schemes (App. E flowchart):
+
+* :func:`repro.des.schemes.simulate_ckpt_only`   — vanilla DP + CKPT
+* :func:`repro.des.schemes.simulate_replication` — Rep+CKPT (degree r)
+* :func:`repro.des.schemes.simulate_spare`       — SPARe+CKPT (exact Alg. 1/2
+  semantics via :class:`repro.core.SpareState` + :class:`repro.core.Rectlr`)
+"""
+from .params import DESParams
+from .schemes import SimResult, simulate_ckpt_only, simulate_replication, simulate_spare
+
+__all__ = [
+    "DESParams", "SimResult",
+    "simulate_ckpt_only", "simulate_replication", "simulate_spare",
+]

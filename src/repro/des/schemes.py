@@ -1,0 +1,400 @@
+"""The three simulated schemes (paper App. E flowchart, Sec. 5.2).
+
+All three share the same bulk-synchronous skeleton::
+
+    [maybe checkpoint] -> compute phase -> all-reduce attempt
+        |- no failure detected: commit step
+        |- failure(s): failed all-reduce (0.5 T_a) -> scheme-specific recovery
+
+and the same accounting:
+
+* ``wall``       — total simulated wall-clock = time-to-train;
+* ``committed``  — work time of steps that survived to the end (compute
+  including redundant stacks and patches + successful all-reduces).
+  Checkpoint saves, failed all-reduces, shrink/controller time, global
+  restarts, and rolled-back (reworked) steps are downtime/waste.
+  ``availability = committed / wall`` — matching Eq. 2's semantics, where
+  J(r) = ttt/T0 = S_bar / A.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.rectlr import Rectlr
+from ..core.state import SpareState
+from ..core.theory import mu as mu_theory
+from ..core.theory import tc_star
+from .failures import FailureProcess
+from .params import DESParams
+
+__all__ = ["SimResult", "simulate_ckpt_only", "simulate_replication", "simulate_spare"]
+
+
+@dataclass
+class SimResult:
+    scheme: str
+    n: int
+    r: int
+    wall: float
+    committed: float
+    t0: float
+    steps_done: int
+    node_failures: int
+    wipeouts: int
+    ckpt_count: int
+    total_stacks: float      # stacks computed across committed steps
+    patches: int
+    controller_seconds: float = 0.0
+
+    @property
+    def ttt_norm(self) -> float:
+        return self.wall / self.t0
+
+    @property
+    def availability(self) -> float:
+        return self.committed / self.wall if self.wall > 0 else 1.0
+
+    @property
+    def avg_stacks(self) -> float:
+        return self.total_stacks / max(self.steps_done, 1)
+
+
+class _Sim:
+    """Shared clock / failure-stream / accounting plumbing."""
+
+    def __init__(self, p: DESParams, seed: int):
+        self.p = p
+        self.rng = np.random.default_rng(seed)
+        self.proc = FailureProcess(
+            p.mtbf, p.weibull_shape, self.rng, law=p.failure_law,
+            scale_with_survivors=p.scale_rate_with_survivors,
+        )
+        self.now = 0.0
+        self.alive = p.n
+        self.next_fail = self.proc.next_arrival(0.0, self.alive, p.n)
+        self.pending: list[int] = []        # failed groups awaiting detection
+        self.dead: set[int] = set()
+        # accounting
+        self.committed = 0.0
+        self.work_since_ckpt = 0.0
+        self.node_failures = 0
+        self.wipeouts = 0
+        self.ckpt_count = 0
+        self.total_stacks = 0.0
+        self.patches = 0
+        self.stacks_since_ckpt = 0.0
+        self.total_stacks_committed = 0.0
+
+    # -------------------------------------------------------------- #
+    def jitter(self) -> float:
+        return max(0.0, float(self.rng.normal(1.0, self.p.jitter_std)))
+
+    def advance(self, duration: float) -> float:
+        """Advance the clock by a jittered duration; harvest failure
+        arrivals that land inside the window into ``pending``."""
+        dur = duration * self.jitter()
+        end = self.now + dur
+        while self.next_fail <= end and self.alive > 0:
+            victim = self._draw_victim()
+            if victim is not None:
+                self.pending.append(victim)
+                self.dead.add(victim)
+                self.alive -= 1
+                self.node_failures += 1
+            self.next_fail = self.proc.next_arrival(
+                self.next_fail, max(self.alive, 1), self.p.n
+            )
+        self.now = end
+        return dur
+
+    def _draw_victim(self) -> int | None:
+        candidates = [w for w in range(self.p.n) if w not in self.dead]
+        if not candidates:
+            return None
+        return int(self.rng.choice(candidates))
+
+    def restart(self) -> None:
+        """Global restart: T_r downtime, full capacity restored, progress
+        rolls back to the last checkpoint (handled by caller), pending
+        failure queue cleared, arrival process re-armed."""
+        self.now += self.p.t_restart * self.jitter()
+        self.dead.clear()
+        self.pending.clear()
+        self.alive = self.p.n
+        self.wipeouts += 1
+        self.work_since_ckpt = 0.0
+        self.stacks_since_ckpt = 0.0
+        self.next_fail = self.proc.next_arrival(self.now, self.alive, self.p.n)
+
+    def checkpoint(self) -> None:
+        self.advance(self.p.t_save)
+        self.committed += self.work_since_ckpt
+        self.total_stacks_committed += self.stacks_since_ckpt
+        self.work_since_ckpt = 0.0
+        self.stacks_since_ckpt = 0.0
+        self.ckpt_count += 1
+
+    def finish(self) -> None:
+        self.committed += self.work_since_ckpt
+        self.total_stacks_committed += self.stacks_since_ckpt
+
+
+def _result(sim: _Sim, scheme: str, r: int, steps_done: int,
+            controller_seconds: float = 0.0) -> SimResult:
+    p = sim.p
+    return SimResult(
+        scheme=scheme, n=p.n, r=r,
+        wall=sim.now, committed=sim.committed, t0=p.t0,
+        steps_done=steps_done,
+        node_failures=sim.node_failures, wipeouts=sim.wipeouts,
+        ckpt_count=sim.ckpt_count,
+        total_stacks=sim.total_stacks_committed,
+        patches=sim.patches,
+        controller_seconds=controller_seconds,
+    )
+
+
+# ------------------------------------------------------------------ #
+# Scheme 1: CKPT-only (vanilla DP + checkpointing)                    #
+# ------------------------------------------------------------------ #
+def simulate_ckpt_only(p: DESParams, seed: int = 0,
+                       t_c: float | None = None,
+                       max_wall: float | None = None) -> SimResult:
+    """Vanilla synchronous DP: *any* node failure is a system failure
+    (all N partial gradients required), so every failure costs a global
+    restart plus rework. In the restart-dominant regime this barely makes
+    progress (paper Sec. 5.2.1)."""
+    sim = _Sim(p, seed)
+    t_c = t_c if t_c is not None else tc_star(p.mtbf, p.t_save, p.t_restart)
+    max_wall = max_wall if max_wall is not None else 500.0 * p.t0
+
+    step = 0
+    ckpt_step = 0
+    last_ckpt_wall = 0.0
+    while step < p.steps and sim.now < max_wall:
+        if sim.now - last_ckpt_wall >= t_c and step > ckpt_step:
+            sim.checkpoint()
+            ckpt_step = step
+            last_ckpt_wall = sim.now
+        work = sim.advance(p.t_comp)                # one stack
+        if sim.pending:                             # detected at all-reduce
+            sim.advance(p.t_allreduce * p.failed_allreduce_frac)
+            step = ckpt_step                        # rework to last ckpt
+            sim.restart()
+            last_ckpt_wall = sim.now
+            continue
+        work += sim.advance(p.t_allreduce)
+        if sim.pending:
+            # failure landed inside the all-reduce window: treat as failed
+            step = ckpt_step
+            sim.restart()
+            last_ckpt_wall = sim.now
+            continue
+        step += 1
+        sim.work_since_ckpt += work
+        sim.stacks_since_ckpt += 1.0
+    sim.finish()
+    return _result(sim, "ckpt_only", r=1, steps_done=step)
+
+
+# ------------------------------------------------------------------ #
+# Scheme 2: Rep+CKPT (traditional replication, degree r)              #
+# ------------------------------------------------------------------ #
+def simulate_replication(p: DESParams, r: int, seed: int = 0,
+                         t_c: float | None = None,
+                         max_wall: float | None = None) -> SimResult:
+    """Traditional replication (Fig. 2): group ``w`` hosts the ``r``
+    consecutive types ``{w .. w+r-1 mod N}`` and computes *all* of them
+    every step (r x workload). Failures are masked while every type keeps
+    >= 1 surviving host; wipe-out forces the global restart."""
+    sim = _Sim(p, seed)
+    n = p.n
+    t_f = mu_theory(n, r) * p.mtbf
+    t_c = t_c if t_c is not None else tc_star(t_f, p.t_save, p.t_restart)
+    max_wall = max_wall if max_wall is not None else 500.0 * p.t0
+
+    # hosts[i] = {i-r+1 .. i} mod N  (consecutive-window replication)
+    hosts = (np.arange(n)[:, None] - np.arange(r)[None, :]) % n
+    host_alive = np.full(n, r, dtype=np.int64)
+
+    def apply_failures(groups: list[int]) -> bool:
+        """Returns True on wipe-out."""
+        for w in groups:
+            types_of_w = (w + np.arange(r)) % n
+            host_alive[types_of_w] -= 1
+        return bool((host_alive == 0).any())
+
+    step = 0
+    ckpt_step = 0
+    last_ckpt_wall = 0.0
+    while step < p.steps and sim.now < max_wall:
+        if sim.now - last_ckpt_wall >= t_c and step > ckpt_step:
+            sim.checkpoint()
+            ckpt_step = step
+            last_ckpt_wall = sim.now
+        work = sim.advance(r * p.t_comp)            # all r stacks, always
+        if sim.pending:
+            sim.advance(p.t_allreduce * p.failed_allreduce_frac)
+            failed = sim.pending[:]
+            sim.pending.clear()
+            if apply_failures(failed):
+                step = ckpt_step
+                host_alive[:] = r
+                sim.restart()
+                last_ckpt_wall = sim.now
+                continue
+            sim.advance(p.t_shrink)
+            # surviving copies already computed: redo all-reduce only
+            work += sim.advance(p.t_allreduce)
+            step += 1
+            sim.work_since_ckpt += work
+            sim.stacks_since_ckpt += r
+            continue
+        work += sim.advance(p.t_allreduce)
+        step += 1
+        sim.work_since_ckpt += work
+        sim.stacks_since_ckpt += r
+    sim.finish()
+    return _result(sim, "replication", r=r, steps_done=step)
+
+
+# ------------------------------------------------------------------ #
+# Scheme 3: SPARe+CKPT (Alg. 1 exact semantics)                        #
+# ------------------------------------------------------------------ #
+def simulate_spare(p: DESParams, r: int, seed: int = 0,
+                   t_c: float | None = None,
+                   max_wall: float | None = None,
+                   binary_search: bool = False,
+                   dynamic_ckpt: bool = False,
+                   straggler_frac: float = 0.0,
+                   straggler_slowdown: float = 3.0) -> SimResult:
+    """SPARe+CKPT with the *actual* protocol implementation: the DES calls
+    the same :class:`SpareState`/:class:`Rectlr` objects the trainer uses,
+    so simulated availability reflects the real controller decisions
+    (all-reduce stack evolution, reordering, patch computes, wipe-outs).
+
+    ``dynamic_ckpt`` enables the beyond-paper Weibull-aware checkpoint
+    interval (Sec. 5.2.2 of the paper suggests it closes the low-r gap):
+    with shape k < 1 the hazard rate is highest right after a failure, so
+    the policy shortens the interval while failures are recent and relaxes
+    back to T_c* as the system stays quiet.
+
+    ``straggler_frac`` > 0 enables the beyond-paper straggler model: each
+    step, that fraction of groups runs ``straggler_slowdown``x slow.
+    Vanilla DP (and replication) wait for the slowest group; SPARe's
+    early-all-reduce trigger fires as soon as every shard *type* is
+    collectible from the fast groups' stacks — when redundancy covers a
+    straggler's types elsewhere, its compute is off the critical path
+    (the paper's "aggregate as soon as all types are collectible" doubles
+    as straggler masking; here we quantify it).
+    """
+    sim = _Sim(p, seed)
+    n = p.n
+    t_f = mu_theory(n, r) * p.mtbf
+    t_c_base = t_c if t_c is not None else tc_star(t_f, p.t_save, p.t_restart)
+    max_wall = max_wall if max_wall is not None else 500.0 * p.t0
+
+    state = SpareState(n, r)
+    ctl = Rectlr(binary_search=binary_search)
+
+    step = 0
+    ckpt_step = 0
+    last_ckpt_wall = 0.0
+    last_failure_wall = -p.mtbf
+    controller_seconds = 0.0
+
+    def current_t_c() -> float:
+        if not dynamic_ckpt:
+            return t_c_base
+        # hazard-adapted interval: fresh failures (age << MTBF) => shorter
+        age = max(sim.now - last_failure_wall, 1.0)
+        k = p.weibull_shape
+        scale = min((age / p.mtbf) ** (1.0 - k), 1.5)
+        return max(2.0 * p.t_save, t_c_base * scale)
+
+    while step < p.steps and sim.now < max_wall:
+        if sim.now - last_ckpt_wall >= current_t_c() and step > ckpt_step:
+            sim.checkpoint()
+            ckpt_step = step
+            last_ckpt_wall = sim.now
+        s_a = state.s_a
+        if straggler_frac > 0.0:
+            # which alive groups are slow this step?
+            alive_groups = state.survivors
+            slow = sim.rng.random(alive_groups.size) < straggler_frac
+            fast = alive_groups[~slow]
+            # fast groups' committed prefixes cover the stragglers' types?
+            covered = np.zeros(state.n, dtype=bool)
+            covered[state.stacks[fast, :s_a].ravel()] = True
+            if covered.all():
+                step_comp = s_a * p.t_comp          # stragglers irrelevant
+            else:
+                # SPARe masking: fast hosts supply the missing types by
+                # computing extra stacks (the patch-compute path) — the
+                # step costs the minimal covering depth d <= r, or waiting
+                # for the stragglers, whichever is cheaper
+                wait = straggler_slowdown * s_a
+                best = wait
+                for d in range(s_a + 1, state.r + 1):
+                    if d >= wait:
+                        break
+                    cov = np.zeros(state.n, dtype=bool)
+                    cov[state.stacks[fast, :d].ravel()] = True
+                    if cov.all():
+                        best = float(d)
+                        break
+                step_comp = best * p.t_comp
+        else:
+            step_comp = s_a * p.t_comp
+        work = sim.advance(step_comp)               # compute S_A stacks
+        if not sim.pending:
+            work += sim.advance(p.t_allreduce)
+            if sim.pending:
+                # failure landed inside the all-reduce: it fails late;
+                # charge the failed fraction and fall through to recovery
+                work -= p.t_allreduce * (1.0 - p.failed_allreduce_frac)
+            else:
+                step += 1
+                sim.work_since_ckpt += work
+                sim.stacks_since_ckpt += s_a
+                continue
+        else:
+            work += sim.advance(p.t_allreduce * p.failed_allreduce_frac)
+
+        # ---- recovery path ----
+        failed = sim.pending[:]
+        sim.pending.clear()
+        last_failure_wall = sim.now
+        outcome = ctl.on_failures(state, failed)
+        controller_seconds += outcome.controller_seconds
+        sim.advance(p.t_controller)
+        if outcome.wipeout:
+            state.reset()
+            step = ckpt_step
+            sim.restart()
+            last_ckpt_wall = sim.now
+            continue
+        # patch computes run in parallel across groups: time = max per-group
+        patch_stacks = 0
+        if outcome.patch:
+            loads: dict[int, int] = {}
+            for w, _ in outcome.patch:
+                loads[w] = loads.get(w, 0) + 1
+            patch_stacks = max(loads.values())
+            work += sim.advance(patch_stacks * p.t_comp)
+            sim.patches += len(outcome.patch)
+        sim.advance(p.t_shrink)
+        work += sim.advance(p.t_allreduce)          # redo the all-reduce
+        step += 1
+        sim.work_since_ckpt += work
+        # wall-time-equivalent stacks this step: S_A at compute time plus the
+        # critical-path patch stacks (this is exactly the c(k)+rho_k quantity
+        # of Thm. 4.2, measured instead of predicted)
+        sim.stacks_since_ckpt += s_a + patch_stacks
+        continue
+    sim.finish()
+    res = _result(sim, "spare", r=r, steps_done=step,
+                  controller_seconds=controller_seconds)
+    return res

@@ -1,0 +1,121 @@
+"""Causal GQA flash attention as a Pallas TPU kernel.
+
+TPU-native adaptation (not a CUDA port):
+
+* grid = (B, H, nQ, nK) with the K dimension innermost and marked
+  ``arbitrary`` — on TPU the innermost grid dims execute *sequentially*
+  per core, so the online-softmax running state (m, l, acc) lives in VMEM
+  scratch across K steps instead of CUDA's per-warp registers;
+* BlockSpecs stream (block_q x d) query tiles and (block_k x d) KV tiles
+  HBM->VMEM; the MXU sees (block_q x d) @ (d x block_k) matmuls with
+  d = head_dim = 64/128 — both MXU-aligned;
+* GQA is free: the K/V BlockSpec ``index_map`` maps query-head h to KV
+  head ``h // group`` — no materialized ``repeat_kv``;
+* causality skips strictly-upper tiles via ``pl.when`` (the block is
+  still DMA'd — block-sparse grid pruning is a further optimization — but
+  the MXU work is skipped, which is what dominates).
+
+Numerics: online softmax in fp32, output cast to the query dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref,
+                           m_scr, l_scr, acc_scr,
+                           *, scale: float, block_q: int, block_k: int,
+                           causal: bool, n_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (iq * block_q + block_q - 1 >= ik * block_k) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, _NEG_INF)
+        m_prev = m_scr[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           *, causal: bool = True, block_q: int = 256,
+                           block_k: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, D); k, v: (B, KV, S, D). Returns (B, H, S, D)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0, f"GQA needs H % KV == 0, got {h} % {kv}"
+    group = h // kv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    n_q, n_k = s // block_q, s // block_k
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        flash_attention_kernel, scale=scale, block_q=block_q,
+        block_k=block_k, causal=causal, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, d), jnp.float32),   # output acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                "parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,57 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites run the
+kernel bodies in Python on CPU (correctness) and compile to Mosaic on a
+real TPU (performance). The model layers call the pure-jnp paths by
+default; these ops are the drop-in hot-path replacements wired in by the
+``use_pallas`` knob of the serving/training drivers on TPU deployments.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .rmsnorm import rmsnorm_pallas
+from .ssd_scan import ssd_scan_pallas
+
+__all__ = ["flash_attention", "ssd_scan", "rmsnorm", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256,
+                    interpret: bool | None = None) -> jax.Array:
+    """Causal GQA flash attention. q: (B,H,S,D); k/v: (B,KV,S,D)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 128,
+             interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """SSD chunk scan. x: (B,H,S,P); dt: (B,H,S); a_log: (H,);
+    b/c: (B,G,S,N). Returns (y, final_state)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    return ssd_scan_pallas(x, dt[..., None], a, b, c, chunk=chunk,
+                           interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+            block_rows: int = 256,
+            interpret: bool | None = None) -> jax.Array:
+    interp = (not on_tpu()) if interpret is None else interpret
+    return rmsnorm_pallas(x, w, eps=eps, block_rows=block_rows,
+                          interpret=interp)

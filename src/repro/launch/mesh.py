@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and only then calls these.
+
+Production target: TPU v5e pods.
+  single-pod : (16, 16)    = 256 chips, axes (data, model)
+  multi-pod  : (2, 16, 16) = 512 chips, axes (pod, data, model)
+
+The SPARe data-parallel groups are the ``pod x data`` slices (N = 32 DP
+groups of M = 16 model-sharded chips on the multi-pod mesh); the ``pod``
+axis crosses the DCI boundary, which is exactly the axis the SPARe
+failure-masking weights neutralize when a whole slice drops out.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_axes", "dp_degree"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def dp_degree(mesh: jax.sharding.Mesh, multi_pod: bool) -> int:
+    n = 1
+    for a in dp_axes(multi_pod):
+        n *= mesh.shape[a]
+    return n

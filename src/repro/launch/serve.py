@@ -1,0 +1,72 @@
+"""Serving launcher: batched greedy decoding with a KV/SSM cache.
+
+``python -m repro.launch.serve --arch mamba2-1.3b --tokens 32`` runs a
+smoke-scale batch of requests end to end (prefill + decode loop) and
+reports tokens/s. On TPU the same driver jits ``serve_step`` with the
+production shardings (what the decode_* dry-run cells lower).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    from repro.train import make_serve_step
+
+    cfg = smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    rng = np.random.default_rng(args.seed)
+    b = args.batch
+    s_max = args.prompt_len + args.tokens
+    state = model.init_decode_state(batch=b, s_max=s_max)
+    prompt = rng.integers(0, cfg.vocab, (b, args.prompt_len), dtype=np.int32)
+    embeds = (rng.normal(size=(b, 1, cfg.d_model)).astype(np.float32)
+              if cfg.frontend else None)
+
+    # prefill token-by-token through the decode path (cache-filling)
+    tok = jnp.asarray(prompt[:, :1])
+    for t in range(args.prompt_len):
+        logits, state = serve_step(
+            params, state, jnp.int32(t),
+            tokens=None if cfg.frontend else jnp.asarray(prompt[:, t:t + 1]),
+            embeds=None if not cfg.frontend else jnp.asarray(embeds))
+    next_tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1)[:, None]
+
+    t0 = time.time()
+    generated = [next_tok]
+    for t in range(args.prompt_len, s_max - 1):
+        logits, state = serve_step(
+            params, state, jnp.int32(t),
+            tokens=None if cfg.frontend else generated[-1],
+            embeds=None if not cfg.frontend else jnp.asarray(embeds))
+        generated.append(jnp.argmax(logits[:, :cfg.vocab], axis=-1)[:, None])
+    jax.block_until_ready(generated[-1])
+    dt = time.time() - t0
+    n_tok = b * len(generated)
+    out = np.concatenate([np.asarray(g) for g in generated], axis=1)
+    print(f"[serve] arch={args.arch} batch={b} generated "
+          f"{len(generated)} tokens/request in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s aggregate)")
+    print(f"[serve] sample: {out[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

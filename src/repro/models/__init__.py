@@ -1,0 +1,19 @@
+"""Model zoo: decoder-only LM family covering all 10 assigned architectures.
+
+Families:
+
+* ``dense``  — GQA transformer (optionally QKV-bias, padded-head TP)
+* ``moe``    — MLA attention + shared/routed top-k experts (DeepSeek V2/V3)
+* ``ssm``    — Mamba-2 SSD (attention-free)
+* ``hybrid`` — Jamba-style 1:7 attn:mamba interleave with periodic MoE
+
+Every architecture is a :class:`repro.models.config.ModelConfig`; the
+builder in :mod:`repro.models.model` assembles the same reusable blocks
+(:mod:`layers`, :mod:`attention`, :mod:`moe`, :mod:`ssm`) into
+``init / loss (train fwd) / decode_step`` functions that are pure JAX and
+scan-over-layers, so compile time is independent of depth.
+"""
+from .config import ModelConfig, MoEConfig, SSMConfig
+from .model import Model, build_model
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "Model", "build_model"]

@@ -1,0 +1,276 @@
+"""Attention: GQA (chunked-causal flash-style reference) and DeepSeek MLA.
+
+Train path uses a query-chunked implementation (O(S * chunk) score memory
+instead of O(S^2)) written so the XLA scheduler sees plain einsums — the
+Pallas flash kernel in ``repro/kernels/flash_attention.py`` implements the
+same contract for the TPU hot path and is validated against
+:func:`attend_chunked` (its pure-jnp oracle lives in ``kernels/ref.py``).
+
+Decode path scores one query against a (possibly sequence-sharded) KV
+cache; softmax over the sharded key axis lowers to all-reduce(max)/(sum) —
+the TPU analogue of split-KV flash-decode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, rmsnorm
+
+__all__ = [
+    "attend_chunked", "gqa_forward", "gqa_decode", "mla_forward",
+    "mla_decode", "KVCache", "MLACache", "init_gqa_cache", "init_mla_cache",
+]
+
+_NEG_INF = -2.0 ** 20  # large-but-finite: keeps bf16/softmax NaN-free
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, KV, dh) -> (B, S, KV*n_rep, dh) by head repetition."""
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, dh)
+                            ).reshape(b, s, kv * n_rep, dh)
+
+
+def attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                   chunk: int = 512, causal: bool = True) -> jax.Array:
+    """Causal attention with query chunking.
+
+    q: (B, S, H, dh); k, v: (B, S, H, dh)  (already GQA-expanded).
+    Returns (B, S, H, dh). Scores for one chunk are (B, H, C, S) — the
+    working set stays O(S*C) per head, which is what makes the 32k-prefill
+    shapes compile inside a 16 GB HBM budget without a custom kernel.
+    """
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+
+    kT = k.transpose(0, 2, 3, 1)         # (B, H, dh, S)
+    vT = v.transpose(0, 2, 1, 3)         # (B, H, S, dh)
+    q_chunks = q.reshape(b, n_chunks, chunk, h, dh).transpose(1, 0, 3, 2, 4)
+
+    kpos = jnp.arange(s)
+
+    def one_chunk(ci, qc):
+        # qc: (B, H, C, dh)
+        scores = jnp.einsum("bhcd,bhdk->bhck", qc, kT) * scale
+        scores = scores.astype(jnp.float32)
+        if causal:
+            qpos = ci * chunk + jnp.arange(chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            scores = jnp.where(mask[None, None], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhck,bhkd->bhcd", probs, vT)
+
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(n_chunks), q_chunks))
+    # (n_chunks, B, H, C, dh) -> (B, S, H, dh)
+    return out.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dh)
+
+
+# ------------------------------------------------------------------ #
+# GQA                                                                 #
+# ------------------------------------------------------------------ #
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S_max, KV, dh)
+    v: jax.Array      # (B, S_max, KV, dh)
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, s_max: int,
+                   dtype=jnp.bfloat16) -> KVCache:
+    dh = cfg.resolved_head_dim
+    shape = (batch, s_max, cfg.n_kv_heads, dh)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _qkv(x, p, cfg: ModelConfig):
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = jnp.dot(x, p["wq"])
+    k = jnp.dot(x, p["wk"])
+    v = jnp.dot(x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, cfg.n_heads, dh)
+    k = k.reshape(b, s, cfg.n_kv_heads, dh)
+    v = v.reshape(b, s, cfg.n_kv_heads, dh)
+    return q, k, v
+
+
+def gqa_forward(x: jax.Array, p: dict, cfg: ModelConfig,
+                positions: jax.Array | None = None,
+                chunk: int = 512, head_constrain=None) -> jax.Array:
+    """Full-sequence causal GQA. x: (B, S, D) -> (B, S, D).
+
+    ``head_constrain`` pins (B, S, H, dh) tensors to head-sharding over
+    the model axis (implicitly padded for H % TP != 0). Without it GSPMD
+    may shard the *contraction* (head_dim) for awkward head counts and
+    all-reduce the full (S x S) score tensors — measured 4.6 TB/step of
+    avoidable all-reduce on starcoder2-7b (36 heads over TP=16); see
+    EXPERIMENTS.md §Perf.
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q, k, v = _qkv(x, p, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    if head_constrain is not None:
+        q, k, v = head_constrain(q), head_constrain(k), head_constrain(v)
+    out = attend_chunked(q, k, v, chunk=chunk)
+    if head_constrain is not None:
+        out = head_constrain(out)
+    return jnp.dot(out.reshape(b, s, -1), p["wo"])
+
+
+def gqa_decode(x: jax.Array, p: dict, cfg: ModelConfig, cache: KVCache,
+               pos: jax.Array) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, D); pos: () int32 — current position.
+
+    The cache key axis may be sharded ('model'); the masked softmax
+    reduction then lowers to the split-KV pattern (all-reduce max / sum).
+    """
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    q, k_new, v_new = _qkv(x, p, cfg)
+    posb = jnp.broadcast_to(pos[None], (b, 1)) if pos.ndim == 0 else pos
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, pos, axis=1)
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kh = _repeat_kv(k, n_rep)           # (B, S_max, H, dh)
+    vh = _repeat_kv(v, n_rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kh) * dh ** -0.5
+    valid = (jnp.arange(k.shape[1]) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores.astype(jnp.float32), _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vh)
+    y = jnp.dot(out.reshape(b, 1, -1), p["wo"])
+    return y, KVCache(k, v)
+
+
+# ------------------------------------------------------------------ #
+# MLA (DeepSeek multi-head latent attention)                          #
+# ------------------------------------------------------------------ #
+class MLACache(NamedTuple):
+    """Compressed cache: latent c_kv + shared rope key (the whole point of
+    MLA — cache is rank x (kv_lora + d_rope) per token, not heads x dh)."""
+    c_kv: jax.Array    # (B, S_max, kv_lora)
+    k_rope: jax.Array  # (B, S_max, d_rope)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, s_max: int,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+        jnp.zeros((batch, s_max, cfg.mla_d_rope), dtype),
+    )
+
+
+def _mla_q(x, p, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.mla_d_nope, cfg.mla_d_rope
+    if cfg.q_lora_rank:
+        cq = rmsnorm(jnp.dot(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+        q = jnp.dot(cq, p["wq_b"])
+    else:
+        q = jnp.dot(x, p["wq"])
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv(x, p, cfg: ModelConfig, positions):
+    """Project to the latent + shared rope key (cache contents)."""
+    dr = cfg.mla_d_rope
+    ckv = jnp.dot(x, p["wkv_a"])                       # (B,S,lora+dr)
+    c_kv, k_rope = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def _mla_attend(q_nope, q_rope, c_kv, k_rope, p, cfg: ModelConfig,
+                causal_pos: jax.Array | None):
+    """Latent-space attention (the 'absorbed' MLA formulation).
+
+    Scores are computed *in the latent space*: q_nope is absorbed through
+    W_uk so the per-token key is just c_kv (rank 512), never the expanded
+    (H, dh) keys — this is the TPU-friendly form (one big einsum, small
+    cache reads).
+    """
+    b, s_q = q_nope.shape[:2]
+    h, dn, dv = cfg.n_heads, cfg.mla_d_nope, cfg.mla_d_v
+    wk = p["wk_b"].reshape(cfg.kv_lora_rank, h, dn)
+    wv = p["wv_b"].reshape(cfg.kv_lora_rank, h, dv)
+    # absorb: q_lat (B,Sq,H,lora) = q_nope . wk^T
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, wk)
+    scores = jnp.einsum("bqhl,bkl->bhqk", q_lat, c_kv)
+    scores = scores + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+    scores = scores.astype(jnp.float32) * (dn + cfg.mla_d_rope) ** -0.5
+    if causal_pos is not None:
+        qpos, kpos = causal_pos
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_nope.dtype)
+    o_lat = jnp.einsum("bhqk,bkl->bqhl", probs, c_kv)   # latent values
+    out = jnp.einsum("bqhl,lhd->bqhd", o_lat, wv)       # expand via W_uv
+    return out.reshape(b, s_q, h * dv)
+
+
+def mla_forward(x: jax.Array, p: dict, cfg: ModelConfig,
+                positions: jax.Array | None = None,
+                chunk: int = 512) -> jax.Array:
+    """Full-sequence causal MLA. Query-chunked like the GQA path."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q_nope, q_rope = _mla_q(x, p, cfg, positions)
+    c_kv, k_rope = _mla_kv(x, p, cfg, positions)
+
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0
+    kpos = jnp.arange(s)
+
+    def one_chunk(ci):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, ci * chunk, chunk, axis=1)
+        qpos = ci * chunk + jnp.arange(chunk)
+        return _mla_attend(sl(q_nope), sl(q_rope), c_kv, k_rope, p, cfg,
+                           (qpos, kpos))
+
+    out = jax.lax.map(one_chunk, jnp.arange(n_chunks))
+    out = out.transpose(1, 0, 2, 3).reshape(b, s, -1)
+    return jnp.dot(out, p["wo"])
+
+
+def mla_decode(x: jax.Array, p: dict, cfg: ModelConfig, cache: MLACache,
+               pos: jax.Array) -> tuple[jax.Array, MLACache]:
+    """One-token MLA decode against the compressed latent cache."""
+    b = x.shape[0]
+    posb = jnp.broadcast_to(pos[None], (b, 1))
+    q_nope, q_rope = _mla_q(x, p, cfg, posb)
+    c_new, kr_new = _mla_kv(x, p, cfg, posb)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, pos, axis=1)
+
+    s_max = c_kv.shape[1]
+    qpos = pos[None]                     # (1,)
+    kpos = jnp.arange(s_max)
+    out = _mla_attend(q_nope, q_rope, c_kv, k_rope, p, cfg, (qpos, kpos))
+    return jnp.dot(out, p["wo"]), MLACache(c_kv, k_rope)

@@ -1,0 +1,412 @@
+"""Model builder: config -> (init, loss, decode) pure functions.
+
+Layer layout is expressed as *segments*: ``(pattern, n_rep)`` where
+``pattern`` is a tuple of block kinds executed in order and the segment
+repeats ``n_rep`` times under one ``lax.scan`` (per-kind parameter stacks
+carry the leading ``n_rep`` axis). This keeps compile time independent of
+depth while representing every assigned family:
+
+  dense / ssm            [(single-kind,), L]
+  deepseek moe           [(attn_dense,), k] + [(attn_moe,), L-k]
+  jamba hybrid           [(attn_moe, mamba_dense, mamba_moe, ...), L/8]
+
+Decode threads per-layer caches through the same scans (cache stacks are
+the scanned xs/ys; the hidden state is the carry).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import ACT_DTYPE, cross_entropy, embed_lookup, init_linear, rmsnorm
+
+__all__ = ["Model", "build_model", "segments_of"]
+
+
+def segments_of(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    """Compress cfg.block_kinds() into scan segments."""
+    kinds = cfg.block_kinds()
+    if cfg.family == "hybrid":
+        p = cfg.hybrid_period
+        assert cfg.n_layers % p == 0, "hybrid depth must be divisible by period"
+        pattern = tuple(kinds[:p])
+        assert kinds == list(pattern) * (cfg.n_layers // p)
+        return [(pattern, cfg.n_layers // p)]
+    # maximal runs of equal kind
+    segs: list[tuple[tuple[str, ...], int]] = []
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        segs.append(((kinds[i],), j - i))
+        i = j
+    return segs
+
+
+# ------------------------------------------------------------------ #
+# block init                                                          #
+# ------------------------------------------------------------------ #
+def _init_attn(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if cfg.attn_kind == "mla":
+        h, dn, dr, dv = cfg.n_heads, cfg.mla_d_nope, cfg.mla_d_rope, cfg.mla_d_v
+        p: dict = {
+            "wkv_a": init_linear(ks[2], (d, cfg.kv_lora_rank + dr)),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), jnp.float32),
+            "wk_b": init_linear(ks[3], (cfg.kv_lora_rank, h * dn)),
+            "wv_b": init_linear(ks[4], (cfg.kv_lora_rank, h * dv)),
+            "wo": init_linear(ks[5], (h * dv, d)),
+        }
+        if cfg.q_lora_rank:
+            p["wq_a"] = init_linear(ks[0], (d, cfg.q_lora_rank))
+            p["q_norm"] = jnp.ones((cfg.q_lora_rank,), jnp.float32)
+            p["wq_b"] = init_linear(ks[1], (cfg.q_lora_rank, h * (dn + dr)))
+        else:
+            p["wq"] = init_linear(ks[0], (d, h * (dn + dr)))
+        return p
+    dh = cfg.resolved_head_dim
+    p = {
+        "wq": init_linear(ks[0], (d, cfg.n_heads * dh)),
+        "wk": init_linear(ks[1], (d, cfg.n_kv_heads * dh)),
+        "wv": init_linear(ks[2], (d, cfg.n_kv_heads * dh)),
+        "wo": init_linear(ks[3], (cfg.n_heads * dh, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), jnp.float32)
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind != "swiglu":
+        return {
+            "w_in": init_linear(ks[0], (d, f)),
+            "w_out": init_linear(ks[1], (f, d)),
+        }
+    return {
+        "w_gate": init_linear(ks[0], (d, f)),
+        "w_up": init_linear(ks[1], (d, f)),
+        "w_down": init_linear(ks[2], (f, d)),
+    }
+
+
+def _init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    assert m is not None
+    d, fe = cfg.d_model, m.d_expert
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": init_linear(ks[0], (d, m.n_experts), dtype=jnp.float32),
+        "experts": {
+            "w_gate": init_linear(ks[1], (m.n_experts, d, fe)),
+            "w_up": init_linear(ks[2], (m.n_experts, d, fe)),
+            "w_down": init_linear(ks[3], (m.n_experts, fe, d)),
+        },
+    }
+    if m.n_shared:
+        fs = m.n_shared * fe
+        p["shared"] = {
+            "w_gate": init_linear(ks[4], (d, fs)),
+            "w_up": init_linear(ks[5], (d, fs)),
+            "w_down": init_linear(ks[6], (fs, d)),
+        }
+    return p
+
+
+def _init_mamba(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 7)
+    return {
+        "wz": init_linear(ks[0], (d, d_in)),
+        "wx": init_linear(ks[1], (d, d_in)),
+        "wb": init_linear(ks[2], (d, s.n_groups * s.d_state)),
+        "wc": init_linear(ks[3], (d, s.n_groups * s.d_state)),
+        "wdt": init_linear(ks[4], (d, nh)),
+        "conv_w": init_linear(ks[5], (conv_dim, s.conv_width),
+                              scale=s.conv_width ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "gate_norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_linear(ks[6], (d_in, d)),
+    }
+
+
+def _init_block(key, kind: str, cfg: ModelConfig) -> dict:
+    mixer, _, mlp = kind.partition("_")
+    k1, k2 = jax.random.split(key)
+    p: dict = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if mixer == "attn":
+        p["attn"] = _init_attn(k1, cfg)
+    else:
+        p["mamba"] = _init_mamba(k1, cfg)
+    if mlp:
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["mlp" if mlp == "dense" else "moe"] = (
+            _init_mlp(k2, cfg) if mlp == "dense" else _init_moe(k2, cfg))
+    return p
+
+
+# ------------------------------------------------------------------ #
+# block apply                                                         #
+# ------------------------------------------------------------------ #
+@dataclass
+class Model:
+    """Bundle of pure functions for one architecture.
+
+    ``mesh``/``dp_axes`` drive the expert-parallel MoE path and the
+    activation sharding constraints; None falls back to the single-device
+    reference behavior (tests, smoke configs).
+    """
+
+    cfg: ModelConfig
+    mesh: jax.sharding.Mesh | None = None
+    dp_axes: tuple[str, ...] = ("data",)
+    ep_axis: str = "model"
+    attn_chunk: int = 1024
+
+    # ---------------- sharding constraints ---------------- #
+    def _batch_axes(self, batch: int):
+        if self.mesh is None:
+            return None
+        size = 1
+        for a in self.dp_axes:
+            size *= self.mesh.shape[a]
+        return self.dp_axes if batch % size == 0 else None
+
+    def _constrain(self, x: jax.Array, *tail) -> jax.Array:
+        """Pin the batch axis to the data axes (GSPMD otherwise loses it at
+        the embedding gather — conflicting 'data' use between table FSDP
+        and batch sharding replicates the whole forward; measured 16x
+        activation blow-up, see EXPERIMENTS.md §Dry-run)."""
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        spec = P(self._batch_axes(x.shape[0]),
+                 *(tail if tail else (None,) * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def _mask_pad(self, logits: jax.Array) -> jax.Array:
+        """Mask padded vocab columns to -inf (padding exists only so the
+        table shards evenly; it must never win a softmax)."""
+        cfg = self.cfg
+        if cfg.padded_vocab == cfg.vocab:
+            return logits
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        return jnp.where(col < cfg.vocab, logits,
+                         jnp.asarray(-2.0 ** 20, logits.dtype))
+
+    def _pin_layer_grads(self, layer_p):
+        """Pin each weight's *gradient* sharding at its production point
+        (inside the backward of the layer scan) so GSPMD reduce-scatters
+        weight grads to their FSDP shard instead of all-reducing them to
+        replicated inside the loop. Identity in the forward pass."""
+        if self.mesh is None:
+            return layer_p
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.dist.collectives import constrain_grad
+        from repro.dist.sharding import _rule
+
+        def pin(path, leaf):
+            name = None
+            for entry in reversed(path):
+                if isinstance(entry, jax.tree_util.DictKey):
+                    name = entry.key
+                    break
+            spec = P(*_rule(name, leaf.ndim, self.dp_axes))
+            return constrain_grad(leaf, NamedSharding(self.mesh, spec))
+
+        return jax.tree_util.tree_map_with_path(pin, layer_p)
+
+    # ---------------- init ---------------- #
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        segs = segments_of(cfg)
+        keys = jax.random.split(key, len(segs) + 3)
+        params: dict = {
+            "embed": init_linear(keys[0], (cfg.padded_vocab, cfg.d_model),
+                                 scale=0.02),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_linear(keys[1],
+                                            (cfg.d_model, cfg.padded_vocab))
+        seg_params = []
+        for si, (pattern, n_rep) in enumerate(segs):
+            def init_one(k):
+                kk = jax.random.split(k, len(pattern))
+                return tuple(_init_block(kk[i], kind, cfg)
+                             for i, kind in enumerate(pattern))
+            rep_keys = jax.random.split(keys[2 + si], n_rep)
+            stacked = jax.vmap(init_one)(rep_keys)
+            seg_params.append(stacked)
+        params["segments"] = seg_params
+        return params
+
+    # ---------------- blocks ---------------- #
+    def _mlp_part(self, x, p, kind):
+        _, _, mlp = kind.partition("_")
+        if not mlp:
+            return x
+        h = rmsnorm(x, p["ln2"], self.cfg.norm_eps)
+        if mlp == "dense":
+            from .layers import mlp2, swiglu
+            if self.cfg.mlp_kind != "swiglu":
+                return x + mlp2(h, p["mlp"]["w_in"], p["mlp"]["w_out"],
+                                kind=self.cfg.mlp_kind)
+            return x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                              p["mlp"]["w_down"])
+        return x + moe_mod.moe_ffn(h, p["moe"], self.cfg, mesh=self.mesh,
+                                   dp_axes=self.dp_axes, ep_axis=self.ep_axis)
+
+    def _block_forward(self, x, p, kind, positions):
+        cfg = self.cfg
+        mixer = kind.partition("_")[0]
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if mixer == "attn":
+            if cfg.attn_kind == "mla":
+                x = x + attn.mla_forward(h, p["attn"], cfg, positions,
+                                         chunk=self.attn_chunk)
+            else:
+                hc = None
+                if self.mesh is not None:
+                    hc = lambda t: self._constrain(t, None, "model", None)
+                x = x + attn.gqa_forward(h, p["attn"], cfg, positions,
+                                         chunk=self.attn_chunk,
+                                         head_constrain=hc)
+        else:
+            x = x + ssm_mod.mamba_forward(h, p["mamba"], cfg)
+        return self._mlp_part(x, p, kind)
+
+    def _block_decode(self, x, p, kind, cache, pos):
+        cfg = self.cfg
+        mixer = kind.partition("_")[0]
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if mixer == "attn":
+            dec = attn.mla_decode if cfg.attn_kind == "mla" else attn.gqa_decode
+            y, cache = dec(h, p["attn"], cfg, cache, pos)
+            x = x + y
+        else:
+            y, cache = ssm_mod.mamba_decode(h, p["mamba"], cfg, cache)
+            x = x + y
+        return self._mlp_part(x, p, kind), cache
+
+    # ---------------- forward / loss ---------------- #
+    def forward(self, params: dict, tokens: jax.Array | None = None,
+                embeds: jax.Array | None = None) -> jax.Array:
+        """Training forward. Returns logits (B, S, V)."""
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(ACT_DTYPE)
+        else:
+            assert tokens is not None
+            x = embed_lookup(params["embed"], tokens)
+        x = self._constrain(x)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        for (pattern, n_rep), seg in zip(segments_of(cfg), params["segments"]):
+            def body(xc, layer_p):
+                layer_p = self._pin_layer_grads(layer_p)
+                for kind, bp in zip(pattern, layer_p):
+                    xc = self._block_forward(xc, bp, kind, positions)
+                return self._constrain(xc), None
+            if cfg.remat and cfg.remat_policy != "none":
+                policy = {
+                    "nothing": jax.checkpoint_policies.nothing_saveable,
+                    # keep matmul outputs; recompute only cheap elementwise
+                    "dots": jax.checkpoint_policies.
+                    dots_with_no_batch_dims_saveable,
+                }[cfg.remat_policy]
+                body = jax.checkpoint(body, policy=policy)
+            x, _ = jax.lax.scan(body, x, seg)
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = self._mask_pad(jnp.dot(x, head))
+        return self._constrain(logits, None, "model")
+
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        logits = self.forward(params, tokens=batch.get("tokens"),
+                              embeds=batch.get("embeds"))
+        return cross_entropy(logits, batch["labels"])
+
+    # ---------------- decode ---------------- #
+    def init_decode_state(self, batch: int, s_max: int) -> list:
+        """Per-segment stacked caches (leading axis n_rep)."""
+        cfg = self.cfg
+        states = []
+        for pattern, n_rep in segments_of(cfg):
+            per_pos = []
+            for kind in pattern:
+                mixer = kind.partition("_")[0]
+                if mixer == "attn":
+                    c = (attn.init_mla_cache(cfg, batch, s_max)
+                         if cfg.attn_kind == "mla"
+                         else attn.init_gqa_cache(cfg, batch, s_max))
+                else:
+                    c = ssm_mod.init_mamba_cache(cfg, batch)
+                per_pos.append(jax.tree.map(
+                    lambda t: jnp.broadcast_to(t[None], (n_rep, *t.shape)), c))
+            states.append(tuple(per_pos))
+        return states
+
+    def decode_step(self, params: dict, state: list, pos: jax.Array,
+                    tokens: jax.Array | None = None,
+                    embeds: jax.Array | None = None
+                    ) -> tuple[jax.Array, list]:
+        """One-token step. tokens (B, 1) or embeds (B, 1, D); pos () int32.
+        Returns (logits (B, 1, V), new state)."""
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(ACT_DTYPE)
+        else:
+            assert tokens is not None
+            x = embed_lookup(params["embed"], tokens)
+        x = self._constrain(x)
+
+        new_states = []
+        for (pattern, n_rep), seg, seg_cache in zip(
+                segments_of(cfg), params["segments"], state):
+            def body(xc, inp):
+                layer_p, layer_c = inp
+                new_c = []
+                for kind, bp, c in zip(pattern, layer_p, layer_c):
+                    xc, nc = self._block_decode(xc, bp, kind, c, pos)
+                    new_c.append(nc)
+                return xc, tuple(new_c)
+            x, new_cache = jax.lax.scan(body, x, (seg, seg_cache))
+            new_states.append(new_cache)
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        return self._mask_pad(jnp.dot(x, head)), new_states
+
+
+def build_model(cfg: ModelConfig, mesh=None, dp_axes=("data",),
+                attn_chunk: int = 1024) -> Model:
+    return Model(cfg=cfg, mesh=mesh, dp_axes=tuple(dp_axes),
+                 attn_chunk=attn_chunk)

@@ -1,0 +1,243 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Chunked SSD semantics (Dao & Gu 2024): within chunks of length Q the
+recurrence is computed as a masked attention-like quadratic form; across
+chunks a tiny ``lax.scan`` carries the (heads, head_dim, d_state) running
+state. Decode keeps O(1) state per token — which is why the ssm/hybrid
+families are the only ones qualifying for the long_500k shape.
+
+Projections are split per component (z/x/B/C/dt) instead of one fused
+in_proj so each weight shards cleanly over the ``model`` axis (heads and
+d_inner are model-sharded; the small B/C/dt projections replicate).
+
+The per-chunk quadratic form is the Pallas kernel target
+(``repro/kernels/ssd_scan.py``); :func:`ssd_chunked` doubles as its oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, SSMConfig
+from .layers import rmsnorm
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "mamba_forward", "mamba_decode",
+           "MambaCache", "init_mamba_cache"]
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # (B, W-1, conv_dim) — rolling conv window
+    state: jax.Array   # (B, nheads, head_dim, d_state) — SSD state
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> MambaCache:
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return MambaCache(
+        jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+# ------------------------------------------------------------------ #
+# SSD core                                                            #
+# ------------------------------------------------------------------ #
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b: jax.Array, c: jax.Array, chunk: int,
+                state0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   — per-head inputs (P = head_dim)
+    dt: (B, S, H)      — softplus'd timestep
+    a_log: (H,)        — A = -exp(a_log)
+    b, c: (B, S, H, N) — input/output projections (already group-broadcast)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    All decay math in fp32; the recurrence is y_t = c_t . S_t with
+    S_t = exp(dt_t A) S_{t-1} + dt_t b_t (x) x_t.
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))              # (H,)
+    # chunk-major layout for the scan: (nc, B, Q, H, *)
+    xr = x.reshape(bs, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    br = b.reshape(bs, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    cr = c.reshape(bs, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    dtr = dt.reshape(bs, nc, chunk, h).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    init = (jnp.zeros((bs, h, p, n), jnp.float32)
+            if state0 is None else state0.astype(jnp.float32))
+
+    def scan_body(state, inp):
+        xz, bz, cz, dtz = inp                            # (B,Q,H,*)
+        dtaz = dtz * a[None, None, :]                    # (B,Q,H) log-decay
+        cum = jnp.cumsum(dtaz, axis=1)                   # (B,Q,H)
+        seg_total = cum[:, -1]                           # (B,H)
+
+        # intra-chunk quadratic form: L[i,j] = exp(cum_i - cum_j), j <= i
+        logl = cum[:, :, None, :] - cum[:, None, :, :]   # (B,Q,Q,H)
+        l = jnp.where(mask[None, :, :, None], jnp.exp(logl), 0.0)
+        cb = jnp.einsum("bihn,bjhn->bijh",
+                        cz.astype(jnp.float32), bz.astype(jnp.float32))
+        w = cb * l * dtz[:, None, :, :]                  # weight on x_j
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xz.astype(jnp.float32))
+
+        # inter-chunk: y_inter[i] = exp(cum_i) * c_i . state
+        y_inter = jnp.einsum("bihn,bhpn->bihp", cz.astype(jnp.float32), state)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+
+        # state update: decay-to-end-weighted outer products
+        dec_to_end = jnp.exp(seg_total[:, None, :] - cum)  # (B,Q,H)
+        s_chunk = jnp.einsum("bjh,bjhn,bjhp->bhpn",
+                             dec_to_end * dtz, bz.astype(jnp.float32),
+                             xz.astype(jnp.float32))
+        new_state = state * jnp.exp(seg_total)[:, :, None, None] + s_chunk
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    final, ys = jax.lax.scan(scan_body, init, (xr, br, cr, dtr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bs, s, h, p)
+    return y, final
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                    b: jax.Array, c: jax.Array, state: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Single-token SSD update. x (B,H,P), dt (B,H), b,c (B,H,N),
+    state (B,H,P,N) fp32. Returns (y (B,H,P), new_state)."""
+    dtf = dt.astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dtf * a[None, :])                    # (B,H)
+    outer = jnp.einsum("bhp,bhn->bhpn", x.astype(jnp.float32),
+                       b.astype(jnp.float32)) * dtf[:, :, None, None]
+    new_state = state * decay[:, :, None, None] + outer
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------------ #
+# full block                                                          #
+# ------------------------------------------------------------------ #
+def _conv1d_causal(x: jax.Array, w: jax.Array, bias: jax.Array,
+                   prefix: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C); w (C,W); prefix (B,W-1,C).
+
+    f32 taps+bias (cheap: 4-tap depthwise) with a single rounding point —
+    the decode path computes the same window product in f32, so both
+    paths round identically and the SSD recurrence sees the same inputs.
+    """
+    width = w.shape[1]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * wf[None, None, :, i]
+        for i in range(width)
+    )
+    # indexing w as (C, W): w[:, i] per tap
+    return out + bias[None, None, :].astype(jnp.float32)
+
+
+def _split_proj(x, p, cfg: ModelConfig):
+    s = cfg.ssm
+    z = jnp.dot(x, p["wz"])                              # (B,S,d_in)
+    xc = jnp.dot(x, p["wx"])                             # (B,S,d_in)
+    bproj = jnp.dot(x, p["wb"])                          # (B,S,G*N)
+    cproj = jnp.dot(x, p["wc"])                          # (B,S,G*N)
+    dt = jnp.dot(x, p["wdt"])                            # (B,S,H)
+    return z, xc, bproj, cproj, dt
+
+
+def _broadcast_groups(t: jax.Array, n_heads: int, s: SSMConfig) -> jax.Array:
+    """(B,S,G*N) -> (B,S,H,N) by repeating each group across its heads."""
+    bshape = t.shape[:-1]
+    g = s.n_groups
+    t = t.reshape(*bshape, g, s.d_state)
+    rep = n_heads // g
+    t = jnp.broadcast_to(t[..., :, None, :], (*bshape, g, rep, s.d_state))
+    return t.reshape(*bshape, n_heads, s.d_state)
+
+
+def mamba_forward(x: jax.Array, p: dict, cfg: ModelConfig,
+                  state0: jax.Array | None = None,
+                  return_state: bool = False):
+    """Full-sequence Mamba-2 mixer. x (B,S,D) -> (B,S,D)."""
+    s = cfg.ssm
+    assert s is not None
+    bsz, seq, _ = x.shape
+    nh = s.n_heads(cfg.d_model)
+    d_in = s.d_inner(cfg.d_model)
+
+    z, xc, bp, cp, dt = _split_proj(x, p, cfg)
+    conv_in = jnp.concatenate([xc, bp, cp], axis=-1)
+    conv_out = _conv1d_causal(conv_in, p["conv_w"], p["conv_b"])
+    # the f32 conv bias promotes the chain — pin back to the compute dtype
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xs = conv_out[..., :d_in]
+    bs_ = conv_out[..., d_in : d_in + s.n_groups * s.d_state]
+    cs = conv_out[..., d_in + s.n_groups * s.d_state :]
+
+    xh = xs.reshape(bsz, seq, nh, s.head_dim)
+    bh = _broadcast_groups(bs_, nh, s)
+    ch = _broadcast_groups(cs, nh, s)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))
+
+    chunk = min(s.chunk, seq)
+    y, final = ssd_chunked(xh, dt_sp, p["a_log"], bh, ch, chunk,
+                           state0=state0)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, seq, d_in)
+    # gated RMSNorm (mamba-2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["gate_norm"], cfg.norm_eps)
+    out = jnp.dot(y, p["out_proj"])
+    if return_state:
+        return out, final
+    return out
+
+
+def mamba_decode(x: jax.Array, p: dict, cfg: ModelConfig,
+                 cache: MambaCache) -> tuple[jax.Array, MambaCache]:
+    """One-token decode. x (B,1,D)."""
+    s = cfg.ssm
+    assert s is not None
+    bsz = x.shape[0]
+    nh = s.n_heads(cfg.d_model)
+    d_in = s.d_inner(cfg.d_model)
+
+    z, xc, bp, cp, dt = _split_proj(x, p, cfg)
+    conv_in = jnp.concatenate([xc, bp, cp], axis=-1)     # (B,1,C)
+    window = jnp.concatenate([cache.conv, conv_in], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum(
+        "bwc,cw->bc", window.astype(jnp.float32),
+        p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:, :]
+
+    xs = conv_out[:, :d_in]
+    bs_ = conv_out[:, d_in : d_in + s.n_groups * s.d_state]
+    cs = conv_out[:, d_in + s.n_groups * s.d_state :]
+    xh = xs.reshape(bsz, nh, s.head_dim)
+    bh = _broadcast_groups(bs_, nh, s)
+    ch = _broadcast_groups(cs, nh, s)
+    dt_sp = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))
+
+    y, new_state = ssd_decode_step(xh, dt_sp, p["a_log"], bh, ch, cache.state)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, 1, d_in)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["gate_norm"], cfg.norm_eps)
+    return jnp.dot(y, p["out_proj"]), MambaCache(new_conv, new_state)

@@ -1,0 +1,4 @@
+from .step import make_prefill, make_serve_step, make_train_step, weighted_loss
+
+__all__ = ["make_train_step", "make_serve_step", "make_prefill",
+           "weighted_loss"]

@@ -1,0 +1,193 @@
+"""SpareTrainer — the paper's Alg. 1 as an executable training loop.
+
+Glues every substrate together:
+
+  data pipeline  ->  SPARe schedule (stacks, weights)   [host, RECTLR]
+       |                      |
+       v                      v
+  jitted train_step(params, opt, stacked_batch)          [device, SPMD]
+       |
+  checkpoint manager (Eq.-1 interval, in-memory snapshot + disk)
+
+Failure handling per Alg. 1:
+  * injected node failures are detected "at the all-reduce" — i.e. the
+    trainer consults the injector after dispatching a step and, on
+    failure, discards that step's update (the all-reduce failed), runs
+    RECTLR, performs patch compute by re-dispatching with the updated
+    schedule, and continues;
+  * wipe-out -> global restart: state.reset(), rollback to the last
+    snapshot (in-memory tier) or disk checkpoint;
+  * S_A changes recompile the step once per depth (cached).
+
+The trainer runs the *real protocol* at laptop scale (N groups emulated
+in one process, weights mask dead groups' contributions); the same code
+paths scale to the production mesh — the dry-run lowers exactly this
+``train_step``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.core import Rectlr, SpareState
+from repro.data import ShardedTokenPipeline, spare_batch
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init
+from repro.train.step import make_train_step
+
+__all__ = ["SpareTrainer", "PoissonInjector", "TrainReport"]
+
+
+class PoissonInjector:
+    """Host-side failure injector: exponential arrivals in *step* time."""
+
+    def __init__(self, mean_steps_between_failures: float, seed: int = 0,
+                 n_groups: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.mean = mean_steps_between_failures
+        self.next_at = self.rng.exponential(self.mean)
+        self.clock = 0.0
+
+    def __call__(self, state: SpareState) -> list[int]:
+        self.clock += 1.0
+        failed = []
+        while self.clock >= self.next_at:
+            survivors = state.survivors
+            if survivors.size:
+                failed.append(int(self.rng.choice(survivors)))
+            self.next_at += self.rng.exponential(self.mean)
+        return failed
+
+
+@dataclass
+class TrainReport:
+    steps_done: int = 0
+    losses: list = field(default_factory=list)
+    failures: int = 0
+    wipeouts: int = 0
+    reorders: int = 0
+    patches: int = 0
+    recompiles: int = 0
+    ckpt_saves: int = 0
+    controller_seconds: float = 0.0
+
+
+class SpareTrainer:
+    def __init__(self, cfg: ModelConfig, *, n_groups: int, redundancy: int,
+                 seq: int = 128, per_type_batch: int = 2, seed: int = 0,
+                 ckpt_dir: str | None = None, mtbf: float = 300.0,
+                 t_save: float = 60.0, t_restart: float = 3600.0,
+                 base_lr: float = 3e-4, total_steps: int = 1000):
+        self.cfg = cfg
+        self.state = SpareState(n_groups, redundancy)
+        self.ctl = Rectlr()
+        self.model = build_model(cfg)
+        self.pipeline = ShardedTokenPipeline(cfg, seq, per_type_batch,
+                                             seed=seed)
+        key = jax.random.PRNGKey(seed)
+        self.params = self.model.init(key)
+        self.opt_state = adamw_init(self.params,
+                                    moment_dtype=cfg.moment_dtype)
+        self._step_fn = make_train_step(self.model, base_lr=base_lr,
+                                        total_steps=total_steps)
+        self._jitted: dict[int, Any] = {}       # S_A -> compiled step
+        self.ckpt = None
+        if ckpt_dir is not None:
+            self.ckpt = CheckpointManager(
+                ckpt_dir, n_groups=n_groups, redundancy=redundancy,
+                mtbf=mtbf, t_save=t_save, t_restart=t_restart)
+        self.step = 0
+
+    # ---------------------------------------------------------------- #
+    def _compiled(self, s_a: int, report: TrainReport):
+        if s_a not in self._jitted:
+            self._jitted[s_a] = jax.jit(self._step_fn, donate_argnums=(0, 1))
+            report.recompiles += 1
+        return self._jitted[s_a]
+
+    def _dispatch(self, report: TrainReport):
+        batch_np = spare_batch(self.pipeline, self.state, self.step)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        fn = self._compiled(self.state.s_a, report)
+        return fn(self.params, self.opt_state, batch)
+
+    # ---------------------------------------------------------------- #
+    def run(self, steps: int,
+            injector: Callable[[SpareState], list[int]] | None = None,
+            snapshot_every: int = 10) -> TrainReport:
+        report = TrainReport()
+        if self.ckpt is not None:
+            self.ckpt.snapshot(self.step, (self.params, self.opt_state))
+        target = self.step + steps
+        while self.step < target:
+            failed = injector(self.state) if injector is not None else []
+            if failed:
+                # detection at the all-reduce: the in-flight step fails
+                report.failures += len(failed)
+                outcome = self.ctl.on_failures(self.state, failed)
+                report.controller_seconds += outcome.controller_seconds
+                if outcome.wipeout:
+                    report.wipeouts += 1
+                    self.state.reset()
+                    if self.ckpt is not None:
+                        self.step, (self.params, self.opt_state) = \
+                            self.ckpt.rollback()
+                    continue
+                report.reorders += int(outcome.reordered)
+                report.patches += outcome.patch_count
+                # patch compute + shrink happened; schedule is consistent
+                # again — the step below re-collects every type
+            new_params, new_opt, metrics = self._dispatch(report)
+            self.params, self.opt_state = new_params, new_opt
+            report.losses.append(float(metrics["loss"]))
+            self.step += 1
+            report.steps_done += 1
+            if self.ckpt is not None and self.step % snapshot_every == 0:
+                self.ckpt.snapshot(self.step, (self.params, self.opt_state))
+                self.ckpt.maybe_save(self.step,
+                                     (self.params, self.opt_state))
+                report.ckpt_saves = self.ckpt.saves
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return report
+
+    # ---------------------------------------------------------------- #
+    def vanilla_reference_grads(self, step: int | None = None):
+        """Vanilla-DP gradient of the same logical batch (all N types,
+        weight 1/N each) — the §3.1 equivalence oracle used by tests."""
+        step = self.step if step is None else step
+        pristine = SpareState(self.state.n, self.state.r)
+        batch_np = spare_batch(self.pipeline, pristine, step)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        from repro.train.step import weighted_loss
+
+        def total_loss(params):
+            def body(acc, micro):
+                return acc + weighted_loss(self.model, params, micro), None
+            out, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), batch)
+            return out
+
+        return jax.grad(total_loss)(self.params)
+
+    def spare_grads(self, step: int | None = None):
+        """Gradient under the *current* (possibly failed/reordered)
+        schedule — must equal :meth:`vanilla_reference_grads` exactly."""
+        step = self.step if step is None else step
+        batch_np = spare_batch(self.pipeline, self.state, step)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        from repro.train.step import weighted_loss
+
+        def total_loss(params):
+            def body(acc, micro):
+                return acc + weighted_loss(self.model, params, micro), None
+            out, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), batch)
+            return out
+
+        return jax.grad(total_loss)(self.params)

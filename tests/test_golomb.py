@@ -1,0 +1,78 @@
+"""Placement-layer tests: cyclic Golomb rulers and Lemma B.2 invariant."""
+import numpy as np
+import pytest
+
+from repro.core.golomb import (
+    OPTIMAL_RULERS,
+    golomb_ruler,
+    host_sets,
+    is_cyclic_golomb,
+    max_redundancy,
+    type_sets,
+    validate_placement,
+)
+
+
+def test_optimal_rulers_are_golomb_as_integers():
+    # every table entry: all pairwise differences distinct over Z (N = inf)
+    for r, marks in OPTIMAL_RULERS.items():
+        assert len(marks) == r
+        assert marks[0] == 0
+        diffs = set()
+        for a in range(r):
+            for b in range(r):
+                if a == b:
+                    continue
+                d = marks[a] - marks[b]
+                assert d not in diffs, f"r={r}: repeated difference {d}"
+                diffs.add(d)
+
+
+@pytest.mark.parametrize("n,r", [(9, 3), (64, 6), (200, 9), (200, 12),
+                                 (600, 8), (600, 20), (1000, 9), (1000, 26)])
+def test_lemma_b2_no_two_types_share_two_hosts(n, r):
+    validate_placement(n, r)
+
+
+@pytest.mark.parametrize("n,r", [(9, 3), (200, 9), (600, 8), (1000, 10)])
+def test_host_and_type_sets_are_duals(n, r):
+    h = host_sets(n, r)
+    t = type_sets(n, r)
+    # w hosts i  <=>  i in T_w  <=>  w in H_i
+    for i in range(0, n, max(1, n // 17)):
+        for w in h[i]:
+            assert i in t[w]
+    # every group hosts exactly r types; every type has exactly r hosts
+    assert h.shape == (n, r) and t.shape == (n, r)
+    assert len(set(map(int, h[0]))) == r
+
+
+def test_stack0_covers_all_types():
+    # cyclic rotation guarantees stack 0 across groups covers all N types
+    for n, r in [(9, 3), (200, 9), (600, 8)]:
+        t = type_sets(n, r)
+        assert set(map(int, t[:, 0])) == set(range(n))
+
+
+def test_ruler_embeds_mod_small_n():
+    # r=3 ruler (0,1,3) is cyclic-Golomb mod 9 (paper Fig. 3 example)
+    assert is_cyclic_golomb((0, 1, 3), 9)
+    # ... but not mod 4 (differences collide)
+    assert not is_cyclic_golomb((0, 1, 3), 4)
+
+
+def test_pigeonhole_rejection():
+    with pytest.raises(ValueError):
+        golomb_ruler(10, 50)  # r(r-1)=90 > 49 residues
+
+
+def test_greedy_fallback_kicks_in():
+    # N too small for the table-optimal span but large enough for a Sidon set
+    marks = golomb_ruler(4, 17)
+    assert is_cyclic_golomb(marks, 17)
+
+
+def test_max_redundancy_monotone():
+    assert max_redundancy(200) >= 12
+    assert max_redundancy(600) >= 20
+    assert max_redundancy(1000) >= 26

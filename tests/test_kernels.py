@@ -1,0 +1,156 @@
+"""Per-kernel validation: shape/dtype sweeps against the ref.py oracles,
+executed with interpret=True (kernel bodies run in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ops import flash_attention, rmsnorm, ssd_scan
+from repro.kernels.ref import flash_attention_ref, rmsnorm_ref, ssd_scan_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+           dict(atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------------ #
+# flash attention                                                     #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 2, 2, 128, 64),     # MHA
+    (2, 4, 2, 256, 64),     # GQA 2:1
+    (1, 8, 2, 256, 128),    # GQA 4:1, wide head
+    (1, 3, 1, 128, 64),     # MQA, odd head count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, h, kv, s, d, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 64), (64, 32), (128, 128)])
+def test_flash_attention_block_shape_invariance(bq, bk):
+    q = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_non_causal():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_reference():
+    """The kernel and the model's chunked-attention train path agree."""
+    from repro.models.attention import attend_chunked
+    b, h, s, d = 1, 4, 128, 64
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    model_out = attend_chunked(q, k, v, chunk=64)            # (B,S,H,D)
+    kern_out = flash_attention(q.transpose(0, 2, 1, 3),
+                               k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3),
+                               block_q=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(kern_out.transpose(0, 2, 1, 3), model_out,
+                               atol=2e-3, rtol=2e-3)
+
+
+# ------------------------------------------------------------------ #
+# SSD scan                                                            #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("b,h,g,s,p,n,chunk", [
+    (1, 2, 1, 128, 32, 64, 64),
+    (2, 4, 2, 256, 64, 128, 128),
+    (1, 4, 4, 128, 32, 16, 32),    # jamba-like small d_state
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_ref(b, h, g, s, p, n, chunk, dtype):
+    x = jnp.asarray(RNG.normal(size=(b, h, s, p)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, h, s)), jnp.float32)
+    a_log = jnp.asarray(np.log(np.arange(1, h + 1)), jnp.float32)
+    bb = jnp.asarray(RNG.normal(size=(b, g, s, n)), dtype)
+    cc = jnp.asarray(RNG.normal(size=(b, g, s, n)), dtype)
+    y, st = ssd_scan(x, dt, a_log, bb, cc, chunk=chunk, interpret=True)
+    rep = h // g
+    yr, str_ = ssd_scan_ref(x, dt, -jnp.exp(a_log),
+                            jnp.repeat(bb, rep, axis=1),
+                            jnp.repeat(cc, rep, axis=1))
+    np.testing.assert_allclose(y.astype(jnp.float32),
+                               yr.astype(jnp.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 2e-4)
+    np.testing.assert_allclose(st, str_, atol=1e-2, rtol=1e-2)
+
+
+def test_ssd_scan_chunk_invariance():
+    """Different chunk sizes give the same answer (the recurrence is
+    chunking-independent) — guards the cross-chunk state handoff."""
+    b, h, s, p, n = 1, 2, 256, 32, 64
+    x = jnp.asarray(RNG.normal(size=(b, h, s, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, h, s)), jnp.float32)
+    a_log = jnp.zeros((h,), jnp.float32)
+    bb = jnp.asarray(RNG.normal(size=(b, h, s, n)), jnp.float32)
+    cc = jnp.asarray(RNG.normal(size=(b, h, s, n)), jnp.float32)
+    y1, s1 = ssd_scan(x, dt, a_log, bb, cc, chunk=32, interpret=True)
+    y2, s2 = ssd_scan(x, dt, a_log, bb, cc, chunk=128, interpret=True)
+    np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(s1, s2, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_scan_matches_model_layer():
+    """Kernel agrees with the model's ssd_chunked (different layout)."""
+    from repro.models.ssm import ssd_chunked
+    b, h, s, p, n = 1, 2, 128, 16, 32
+    x = jnp.asarray(RNG.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, s, h)), jnp.float32)
+    a_log = jnp.asarray(np.log(np.arange(1, h + 1)), jnp.float32)
+    bb = jnp.asarray(RNG.normal(size=(b, s, h, n)), jnp.float32)
+    cc = jnp.asarray(RNG.normal(size=(b, s, h, n)), jnp.float32)
+    y_model, st_model = ssd_chunked(x, dt, a_log, bb, cc, chunk=64)
+    y_kern, st_kern = ssd_scan(
+        x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1),
+        a_log, bb.transpose(0, 2, 1, 3), cc.transpose(0, 2, 1, 3),
+        chunk=64, interpret=True)
+    np.testing.assert_allclose(y_kern.transpose(0, 2, 1, 3), y_model,
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(st_kern, st_model, atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# rmsnorm                                                             #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("shape", [(4, 128), (2, 50, 256), (3, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    w = jnp.asarray(RNG.normal(size=shape[-1:]), jnp.float32)
+    out = rmsnorm(x, w, block_rows=16, interpret=True)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), **_tol(dtype))
+
+
+def test_rmsnorm_row_padding():
+    # rows not divisible by block_rows exercises the pad/unpad path
+    x = jnp.asarray(RNG.normal(size=(37, 128)), jnp.float32)
+    w = jnp.ones((128,), jnp.float32)
+    out = rmsnorm(x, w, block_rows=16, interpret=True)
+    np.testing.assert_allclose(out, rmsnorm_ref(x, w), atol=1e-5, rtol=1e-5)

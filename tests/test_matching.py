@@ -1,0 +1,198 @@
+"""Matching primitives: Hopcroft-Karp, incremental matcher, MCMF.
+
+Property tests (hypothesis) check the from-scratch implementations against
+brute-force oracles on small random instances.
+"""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.golomb import host_sets
+from repro.core.matching import IncrementalMatcher, hopcroft_karp, min_cost_assignment
+
+
+# ------------------------------------------------------------------ #
+# oracles                                                             #
+# ------------------------------------------------------------------ #
+def brute_max_matching(adj, n_left, n_right):
+    """Exponential-ish Kuhn oracle (fine at the sizes hypothesis draws)."""
+    match_r = [-1] * n_right
+
+    def try_kuhn(u, seen):
+        for v in adj[u]:
+            if v in seen:
+                continue
+            seen.add(v)
+            if match_r[v] == -1 or try_kuhn(match_r[v], seen):
+                match_r[v] = u
+                return True
+        return False
+
+    size = 0
+    for u in range(n_left):
+        if try_kuhn(u, set()):
+            size += 1
+    return size
+
+
+def brute_min_cost_perfect(adj_cost, n_left, n_right):
+    """Exhaustive min-cost perfect matching (n_left <= 7)."""
+    best = None
+    edges = [dict(row) for row in adj_cost]
+    for perm in itertools.permutations(range(n_right), n_left):
+        cost = 0
+        ok = True
+        for u, v in enumerate(perm):
+            if v not in edges[u]:
+                ok = False
+                break
+            cost += edges[u][v]
+        if ok and (best is None or cost < best):
+            best = cost
+    return best
+
+
+# ------------------------------------------------------------------ #
+# Hopcroft-Karp                                                       #
+# ------------------------------------------------------------------ #
+@st.composite
+def bipartite(draw):
+    n_left = draw(st.integers(1, 8))
+    n_right = draw(st.integers(1, 8))
+    adj = []
+    for _ in range(n_left):
+        nbrs = draw(st.lists(st.integers(0, n_right - 1), max_size=n_right,
+                             unique=True))
+        adj.append(nbrs)
+    return adj, n_left, n_right
+
+
+@given(bipartite())
+@settings(max_examples=200, deadline=None)
+def test_hopcroft_karp_matches_oracle(case):
+    adj, nl, nr = case
+    size, ml, mr = hopcroft_karp(adj, nl, nr)
+    assert size == brute_max_matching(adj, nl, nr)
+    # validity: matched pairs are edges and mutual
+    for u, v in enumerate(ml):
+        if v != -1:
+            assert v in adj[u]
+            assert mr[v] == u
+
+
+def test_hopcroft_karp_perfect_on_identity():
+    n = 50
+    adj = [[i] for i in range(n)]
+    size, _, _ = hopcroft_karp(adj, n, n)
+    assert size == n
+
+
+# ------------------------------------------------------------------ #
+# IncrementalMatcher vs full HK                                       #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("n,r,seed", [(30, 4, 0), (60, 5, 1), (100, 6, 2)])
+def test_incremental_matcher_equals_full_hk(n, r, seed):
+    """After each failure, the incremental min-feasible depth equals the
+    depth found by exhaustive HK feasibility from scratch."""
+    rng = np.random.default_rng(seed)
+    hosts = host_sets(n, r)
+    matcher = IncrementalMatcher(hosts, n, depth=1)
+    assert matcher.initialise()
+    alive = np.ones(n, dtype=bool)
+
+    def full_hk_min_depth():
+        survivors = np.flatnonzero(alive)
+        pos = {int(w): k for k, w in enumerate(survivors)}
+        for s in range(1, r + 1):
+            adj = []
+            for i in range(n):
+                row = []
+                for w in hosts[i]:
+                    if alive[w]:
+                        row.extend(range(pos[int(w)] * s, pos[int(w)] * s + s))
+                adj.append(row)
+            size, _, _ = hopcroft_karp(adj, n, survivors.size * s)
+            if size == n:
+                return s
+        return None
+
+    for w in rng.permutation(n)[: n // 2]:
+        w = int(w)
+        alive[w] = False
+        displaced = matcher.fail_group(w)
+        inc = matcher.min_feasible_depth(displaced, r)
+        ref = full_hk_min_depth()
+        if ref is None:
+            assert inc is None
+            break
+        # incremental depth is sticky (never decreases) => inc >= ref, and
+        # both must be feasible; equality holds while depth never overshoots
+        assert inc is not None and inc >= ref
+        if inc > ref:
+            # overshoot allowed only transiently; rebuilding at ref must work
+            fresh = IncrementalMatcher(hosts, n, depth=ref)
+            fresh.alive = [bool(a) for a in alive]
+            fresh.cap = [ref if a else 0 for a in alive]
+            assert fresh.initialise()
+
+
+# ------------------------------------------------------------------ #
+# MCMF                                                                #
+# ------------------------------------------------------------------ #
+@st.composite
+def assignment_instance(draw):
+    n_left = draw(st.integers(1, 6))
+    n_right = draw(st.integers(n_left, 7))
+    adj_cost = []
+    for _ in range(n_left):
+        vs = draw(st.lists(st.integers(0, n_right - 1), min_size=1,
+                           max_size=n_right, unique=True))
+        adj_cost.append([(v, draw(st.integers(0, 1))) for v in vs])
+    return adj_cost, n_left, n_right
+
+
+@given(assignment_instance())
+@settings(max_examples=150, deadline=None)
+def test_min_cost_assignment_optimal_when_perfect(case):
+    adj_cost, nl, nr = case
+    matched, cost, ml = min_cost_assignment(adj_cost, nl, nr)
+    # cardinality must match HK
+    adj = [[v for v, _ in row] for row in adj_cost]
+    hk_size, _, _ = hopcroft_karp(adj, nl, nr)
+    assert matched == hk_size
+    if matched == nl:
+        oracle = brute_min_cost_perfect(adj_cost, nl, nr)
+        assert oracle is not None
+        assert cost == oracle
+    # validity
+    used = set()
+    for u, v in enumerate(ml):
+        if v != -1:
+            assert v not in used
+            used.add(v)
+            assert v in dict(adj_cost[u])
+
+
+@given(assignment_instance())
+@settings(max_examples=100, deadline=None)
+def test_min_cost_assignment_jump_start_equivalent(case):
+    """Seeding with a zero-cost partial matching must not change the
+    optimal cost (extremality argument in the docstring)."""
+    adj_cost, nl, nr = case
+    m0, c0, _ = min_cost_assignment(adj_cost, nl, nr)
+    # build a greedy zero-cost seed
+    seed = [-1] * nl
+    taken = set()
+    for u, row in enumerate(adj_cost):
+        for v, c in row:
+            if c == 0 and v not in taken:
+                seed[u] = v
+                taken.add(v)
+                break
+    m1, c1, _ = min_cost_assignment(adj_cost, nl, nr, initial_match_l=seed)
+    assert m1 == m0
+    if m0 == nl:
+        assert c1 == c0

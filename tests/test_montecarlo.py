@@ -1,0 +1,35 @@
+"""App. C Monte-Carlo validation at reduced trial counts (CI-friendly).
+
+The paper reports <= 1.13 % MAPE on mu and 0.60 % on the mean all-reduce
+stack over 1000 trials; with 60-150 trials we allow ~5 % tolerance.
+"""
+import pytest
+
+from repro.core import theory
+from repro.core.montecarlo import run_montecarlo
+
+
+@pytest.mark.parametrize("n,r,trials,tol", [
+    (200, 3, 150, 0.10),
+    (200, 9, 100, 0.06),
+    (200, 12, 100, 0.06),
+])
+def test_mc_failure_count_matches_thm41(n, r, trials, tol):
+    res = run_montecarlo(n, r, trials=trials, seed=42)
+    expected = theory.mu(n, r)
+    assert abs(res.mean_failures - expected) / expected < tol
+
+
+@pytest.mark.parametrize("n,r,expected", [
+    (200, 9, 2.03),   # paper Table 4 theory column
+    (200, 12, 2.17),
+])
+def test_mc_stack_depth_matches_eq6(n, r, expected):
+    res = run_montecarlo(n, r, trials=100, seed=7)
+    assert res.mean_stack == pytest.approx(expected, rel=0.05)
+
+
+def test_mc_larger_r_endures_more_failures():
+    r_small = run_montecarlo(200, 3, trials=60, seed=0).mean_failures
+    r_large = run_montecarlo(200, 9, trials=60, seed=0).mean_failures
+    assert r_large > 2.5 * r_small
