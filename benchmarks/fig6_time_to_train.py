@@ -3,7 +3,7 @@ discrete-event simulation, with the Eq.-7 theory curve."""
 from __future__ import annotations
 
 from repro.core.theory import j_normalized
-from repro.des import DESParams, simulate_replication, simulate_spare
+from repro.des import DESParams, get_scheme
 
 from .common import save_csv, timed
 
@@ -21,7 +21,8 @@ def run(quick: bool = True) -> list[str]:
             vals = []
             us = 0.0
             for s in seeds:
-                res, t = timed(simulate_replication, p, r, seed=s, repeat=1)
+                res, t = timed(get_scheme("replication", r=r).simulate,
+                               p, seed=s, repeat=1)
                 vals.append(res.ttt_norm)
                 us += t
             rows.append(
@@ -31,7 +32,8 @@ def run(quick: bool = True) -> list[str]:
             vals = []
             us = 0.0
             for s in seeds:
-                res, t = timed(simulate_spare, p, r, seed=s, repeat=1)
+                res, t = timed(get_scheme("spare", r=r).simulate,
+                               p, seed=s, repeat=1)
                 vals.append(res.ttt_norm)
                 us += t
             rows.append(

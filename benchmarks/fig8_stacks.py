@@ -4,7 +4,7 @@ absolute error."""
 from __future__ import annotations
 
 from repro.core.theory import s_bar
-from repro.des import DESParams, simulate_spare
+from repro.des import DESParams, get_scheme
 
 from .common import save_csv, timed
 
@@ -18,7 +18,8 @@ def run(quick: bool = True) -> list[str]:
     for n in ns:
         p = DESParams(n=n, steps=steps)
         for r in (3, 6, 9, 12):
-            res, us = timed(simulate_spare, p, r, seed=0, repeat=1)
+            res, us = timed(get_scheme("spare", r=r).simulate,
+                            p, seed=0, repeat=1)
             pred = s_bar(n, r)
             rows.append(
                 f"fig8_stacks[N={n} r={r}],{us:.0f},"

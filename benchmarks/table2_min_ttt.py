@@ -2,7 +2,7 @@
 (the paper's headline 40-52 % gain)."""
 from __future__ import annotations
 
-from repro.des import DESParams, simulate_replication, simulate_spare
+from repro.des import DESParams, get_scheme
 
 from .common import save_csv, timed
 
@@ -22,13 +22,14 @@ def run(quick: bool = True) -> list[str]:
         p = DESParams(n=n, steps=steps)
         us_total = 0.0
 
-        def best(sim, rs):
+        def best(scheme_name, rs):
             nonlocal us_total
             out = []
             for r in rs:
                 accs = []
                 for s in seeds:
-                    res, us = timed(sim, p, r, seed=s, repeat=1)
+                    res, us = timed(get_scheme(scheme_name, r=r).simulate,
+                                    p, seed=s, repeat=1)
                     us_total += us
                     accs.append(res)
                 ttt = sum(a.ttt_norm for a in accs) / len(accs)
@@ -36,15 +37,17 @@ def run(quick: bool = True) -> list[str]:
                 out.append((ttt, avail, r))
             return min(out)
 
-        rep = best(simulate_replication, (2, 3, 4))
-        spare = best(simulate_spare, ((6, 9, 12) if quick
-                                      else tuple(range(4, 15))))
+        rep = best("replication", (2, 3, 4))
+        spare = best("spare", ((6, 9, 12) if quick
+                               else tuple(range(4, 15))))
+        adaptive = best("adaptive", (spare[2],))
         gain = (1 - spare[0] / rep[0]) * 100
         ref = PAPER.get(n, (0, 0, 0))
         rows.append(
             f"table2[N={n}],{us_total:.0f},"
             f"rep_best=r{rep[2]}:{rep[0]:.2f}@{rep[1] * 100:.1f}%;"
             f"spare_best=r{spare[2]}:{spare[0]:.2f}@{spare[1] * 100:.1f}%;"
+            f"adaptive=r{adaptive[2]}:{adaptive[0]:.2f};"
             f"gain={gain:.1f}%;paper_gain={ref[2]:.1f}%")
     save_csv("table2_min_ttt", rows, HEADER)
     return rows

@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.core.theory import mu, r_star, s_bar
+from repro.des import get_scheme
 from repro.train.trainer import PoissonInjector, SpareTrainer
 
 N, R = 8, 3
@@ -20,9 +21,11 @@ print(f"SPARe(N={N}, r={R}): masks ~{mu(N, R):.1f} failures before the "
       f"for N={N}: {r_star(N)}")
 
 cfg = smoke_config("qwen2.5-3b").scaled(grad_accum=1)
+# the recovery policy is pluggable — any registered FaultToleranceScheme
+# (the same objects the DES simulates); "spare" is also the default
 trainer = SpareTrainer(cfg, n_groups=N, redundancy=R, seq=64,
                        per_type_batch=2, ckpt_dir="/tmp/spare_quickstart",
-                       total_steps=60)
+                       total_steps=60, scheme=get_scheme("spare", r=R))
 
 report = trainer.run(40, injector=PoissonInjector(3.0, seed=0))
 

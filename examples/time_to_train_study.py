@@ -11,7 +11,7 @@ Run:  PYTHONPATH=src python examples/time_to_train_study.py [--steps 1500]
 import argparse
 
 from repro.core.theory import j_normalized, mu, s_bar
-from repro.des import DESParams, simulate_replication, simulate_spare
+from repro.des import DESParams, get_scheme
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=1500)
@@ -26,19 +26,26 @@ print(f"{'scheme':12s} {'r':>3s} {'ttt/T0':>7s} {'avail':>7s} "
       f"{'stacks':>7s} {'fails':>6s} {'wipes':>6s}   theory J(r)")
 best = {}
 for r in (2, 3, 4):
-    res = simulate_replication(p, r=r, seed=0)
+    res = get_scheme("replication", r=r).simulate(p, seed=0)
     best.setdefault("rep", []).append(res)
     print(f"{'Rep+CKPT':12s} {r:3d} {res.ttt_norm:7.2f} "
           f"{res.availability * 100:6.1f}% {float(r):7.1f} "
           f"{res.node_failures:6d} {res.wipeouts:6d}")
 for r in (3, 6, 9, 12):
-    res = simulate_spare(p, r=r, seed=0)
+    res = get_scheme("spare", r=r).simulate(p, seed=0)
     best.setdefault("spare", []).append(res)
     print(f"{'SPARe+CKPT':12s} {r:3d} {res.ttt_norm:7.2f} "
           f"{res.availability * 100:6.1f}% {res.avg_stacks:7.2f} "
           f"{res.node_failures:6d} {res.wipeouts:6d}   "
           f"J={j_normalized(r, p.n):.2f} "
           f"(mu={mu(p.n, r):.0f}, S={s_bar(p.n, r):.2f})")
+
+r_best = min(best["spare"], key=lambda x: x.ttt_norm).r
+res = get_scheme("adaptive", r=r_best).simulate(p, seed=0)
+print(f"{'Adaptive':12s} {r_best:3d} {res.ttt_norm:7.2f} "
+      f"{res.availability * 100:6.1f}% {res.avg_stacks:7.2f} "
+      f"{res.node_failures:6d} {res.wipeouts:6d}   "
+      f"(policy switches: {res.mode_switches})")
 
 rep_best = min(best["rep"], key=lambda x: x.ttt_norm)
 spare_best = min(best["spare"], key=lambda x: x.ttt_norm)

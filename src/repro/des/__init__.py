@@ -6,17 +6,46 @@ exponentially distributed alternatives), communicator shrink, RECTLR,
 patch computes, checkpoint saves, rework, and global restarts — with the
 paper's Table 1 parameters for a 600k-H100 cluster as defaults.
 
-Schemes (App. E flowchart):
+Schemes are pluggable :class:`FaultToleranceScheme` policies driven by one
+shared bulk-synchronous engine (:mod:`repro.des.engine`) and resolved by
+string key::
 
-* :func:`repro.des.schemes.simulate_ckpt_only`   — vanilla DP + CKPT
-* :func:`repro.des.schemes.simulate_replication` — Rep+CKPT (degree r)
-* :func:`repro.des.schemes.simulate_spare`       — SPARe+CKPT (exact Alg. 1/2
-  semantics via :class:`repro.core.SpareState` + :class:`repro.core.Rectlr`)
+    from repro.des import DESParams, get_scheme
+
+    res = get_scheme("spare", r=9).simulate(DESParams(n=200), seed=0)
+
+Registered policies (App. E flowchart + beyond-paper additions):
+
+* ``"ckpt_only"``   — vanilla DP + CKPT
+* ``"replication"`` — Rep+CKPT (degree r)
+* ``"spare"``       — SPARe+CKPT (exact Alg. 1/2 semantics via
+  :class:`repro.core.SpareState` + :class:`repro.core.Rectlr`)
+* ``"adaptive"``    — Chameleon-style selector switching among the above
+  from the observed failure rate
+
+The ``simulate_*`` functions remain as deprecated aliases of the registry
+entries; new code should use :func:`get_scheme`.
 """
+from .engine import (FailureRecovery, FaultToleranceScheme, SimClock,
+                     SimResult, run_scheme)
 from .params import DESParams
-from .schemes import SimResult, simulate_ckpt_only, simulate_replication, simulate_spare
+from .schemes import (
+    AdaptiveScheme,
+    CkptOnlyScheme,
+    ReplicationScheme,
+    SpareScheme,
+    get_scheme,
+    list_schemes,
+    register_scheme,
+    simulate_ckpt_only,
+    simulate_replication,
+    simulate_spare,
+)
 
 __all__ = [
-    "DESParams", "SimResult",
+    "DESParams", "SimResult", "SimClock",
+    "FaultToleranceScheme", "FailureRecovery", "run_scheme",
+    "CkptOnlyScheme", "ReplicationScheme", "SpareScheme", "AdaptiveScheme",
+    "register_scheme", "get_scheme", "list_schemes",
     "simulate_ckpt_only", "simulate_replication", "simulate_spare",
 ]

@@ -1,0 +1,233 @@
+"""Frozen pre-refactor scheme loops — the bit-for-bit parity reference.
+
+These are the original hand-rolled ``simulate_*`` implementations exactly
+as they existed before the :class:`repro.des.engine.FaultToleranceScheme`
+redesign. They exist ONLY so ``tests/test_scheme_api.py`` can assert that
+the ported schemes on the shared engine reproduce the legacy trajectories
+bit-for-bit at fixed seeds (same RNG-draw order => identical walls,
+committed work, and event counts).
+
+Do not add features here; the public API is :func:`repro.des.get_scheme`.
+"""
+from __future__ import annotations
+
+from ..core.rectlr import Rectlr
+from ..core.state import SpareState
+from ..core.theory import mu as mu_theory
+from ..core.theory import tc_star
+from .engine import SimClock as _Sim
+from .engine import SimResult, build_result as _result
+from .params import DESParams
+
+import numpy as np
+
+__all__ = ["legacy_ckpt_only", "legacy_replication", "legacy_spare"]
+
+
+# ------------------------------------------------------------------ #
+# Scheme 1: CKPT-only (vanilla DP + checkpointing)                    #
+# ------------------------------------------------------------------ #
+def legacy_ckpt_only(p: DESParams, seed: int = 0,
+                     t_c: float | None = None,
+                     max_wall: float | None = None) -> SimResult:
+    sim = _Sim(p, seed)
+    t_c = t_c if t_c is not None else tc_star(p.mtbf, p.t_save, p.t_restart)
+    max_wall = max_wall if max_wall is not None else 500.0 * p.t0
+
+    step = 0
+    ckpt_step = 0
+    last_ckpt_wall = 0.0
+    while step < p.steps and sim.now < max_wall:
+        if sim.now - last_ckpt_wall >= t_c and step > ckpt_step:
+            sim.checkpoint()
+            ckpt_step = step
+            last_ckpt_wall = sim.now
+        work = sim.advance(p.t_comp)                # one stack
+        if sim.pending:                             # detected at all-reduce
+            sim.advance(p.t_allreduce * p.failed_allreduce_frac)
+            step = ckpt_step                        # rework to last ckpt
+            sim.restart()
+            last_ckpt_wall = sim.now
+            continue
+        work += sim.advance(p.t_allreduce)
+        if sim.pending:
+            # failure landed inside the all-reduce window: treat as failed
+            step = ckpt_step
+            sim.restart()
+            last_ckpt_wall = sim.now
+            continue
+        step += 1
+        sim.work_since_ckpt += work
+        sim.stacks_since_ckpt += 1.0
+    sim.finish()
+    return _result(sim, "ckpt_only", r=1, steps_done=step)
+
+
+# ------------------------------------------------------------------ #
+# Scheme 2: Rep+CKPT (traditional replication, degree r)              #
+# ------------------------------------------------------------------ #
+def legacy_replication(p: DESParams, r: int, seed: int = 0,
+                       t_c: float | None = None,
+                       max_wall: float | None = None) -> SimResult:
+    sim = _Sim(p, seed)
+    n = p.n
+    t_f = mu_theory(n, r) * p.mtbf
+    t_c = t_c if t_c is not None else tc_star(t_f, p.t_save, p.t_restart)
+    max_wall = max_wall if max_wall is not None else 500.0 * p.t0
+
+    # hosts[i] = {i-r+1 .. i} mod N  (consecutive-window replication)
+    hosts = (np.arange(n)[:, None] - np.arange(r)[None, :]) % n
+    host_alive = np.full(n, r, dtype=np.int64)
+
+    def apply_failures(groups: list[int]) -> bool:
+        """Returns True on wipe-out."""
+        for w in groups:
+            types_of_w = (w + np.arange(r)) % n
+            host_alive[types_of_w] -= 1
+        return bool((host_alive == 0).any())
+
+    step = 0
+    ckpt_step = 0
+    last_ckpt_wall = 0.0
+    while step < p.steps and sim.now < max_wall:
+        if sim.now - last_ckpt_wall >= t_c and step > ckpt_step:
+            sim.checkpoint()
+            ckpt_step = step
+            last_ckpt_wall = sim.now
+        work = sim.advance(r * p.t_comp)            # all r stacks, always
+        if sim.pending:
+            sim.advance(p.t_allreduce * p.failed_allreduce_frac)
+            failed = sim.pending[:]
+            sim.pending.clear()
+            if apply_failures(failed):
+                step = ckpt_step
+                host_alive[:] = r
+                sim.restart()
+                last_ckpt_wall = sim.now
+                continue
+            sim.advance(p.t_shrink)
+            # surviving copies already computed: redo all-reduce only
+            work += sim.advance(p.t_allreduce)
+            step += 1
+            sim.work_since_ckpt += work
+            sim.stacks_since_ckpt += r
+            continue
+        work += sim.advance(p.t_allreduce)
+        step += 1
+        sim.work_since_ckpt += work
+        sim.stacks_since_ckpt += r
+    sim.finish()
+    return _result(sim, "replication", r=r, steps_done=step)
+
+
+# ------------------------------------------------------------------ #
+# Scheme 3: SPARe+CKPT (Alg. 1 exact semantics)                        #
+# ------------------------------------------------------------------ #
+def legacy_spare(p: DESParams, r: int, seed: int = 0,
+                 t_c: float | None = None,
+                 max_wall: float | None = None,
+                 binary_search: bool = False,
+                 dynamic_ckpt: bool = False,
+                 straggler_frac: float = 0.0,
+                 straggler_slowdown: float = 3.0) -> SimResult:
+    sim = _Sim(p, seed)
+    n = p.n
+    t_f = mu_theory(n, r) * p.mtbf
+    t_c_base = t_c if t_c is not None else tc_star(t_f, p.t_save, p.t_restart)
+    max_wall = max_wall if max_wall is not None else 500.0 * p.t0
+
+    state = SpareState(n, r)
+    ctl = Rectlr(binary_search=binary_search)
+
+    step = 0
+    ckpt_step = 0
+    last_ckpt_wall = 0.0
+    last_failure_wall = -p.mtbf
+    controller_seconds = 0.0
+
+    def current_t_c() -> float:
+        if not dynamic_ckpt:
+            return t_c_base
+        # hazard-adapted interval: fresh failures (age << MTBF) => shorter
+        age = max(sim.now - last_failure_wall, 1.0)
+        k = p.weibull_shape
+        scale = min((age / p.mtbf) ** (1.0 - k), 1.5)
+        return max(2.0 * p.t_save, t_c_base * scale)
+
+    while step < p.steps and sim.now < max_wall:
+        if sim.now - last_ckpt_wall >= current_t_c() and step > ckpt_step:
+            sim.checkpoint()
+            ckpt_step = step
+            last_ckpt_wall = sim.now
+        s_a = state.s_a
+        if straggler_frac > 0.0:
+            # which alive groups are slow this step?
+            alive_groups = state.survivors
+            slow = sim.rng.random(alive_groups.size) < straggler_frac
+            fast = alive_groups[~slow]
+            # fast groups' committed prefixes cover the stragglers' types?
+            covered = np.zeros(state.n, dtype=bool)
+            covered[state.stacks[fast, :s_a].ravel()] = True
+            if covered.all():
+                step_comp = s_a * p.t_comp          # stragglers irrelevant
+            else:
+                wait = straggler_slowdown * s_a
+                best = wait
+                for d in range(s_a + 1, state.r + 1):
+                    if d >= wait:
+                        break
+                    cov = np.zeros(state.n, dtype=bool)
+                    cov[state.stacks[fast, :d].ravel()] = True
+                    if cov.all():
+                        best = float(d)
+                        break
+                step_comp = best * p.t_comp
+        else:
+            step_comp = s_a * p.t_comp
+        work = sim.advance(step_comp)               # compute S_A stacks
+        if not sim.pending:
+            work += sim.advance(p.t_allreduce)
+            if sim.pending:
+                # failure landed inside the all-reduce: it fails late;
+                # charge the failed fraction and fall through to recovery
+                work -= p.t_allreduce * (1.0 - p.failed_allreduce_frac)
+            else:
+                step += 1
+                sim.work_since_ckpt += work
+                sim.stacks_since_ckpt += s_a
+                continue
+        else:
+            work += sim.advance(p.t_allreduce * p.failed_allreduce_frac)
+
+        # ---- recovery path ----
+        failed = sim.pending[:]
+        sim.pending.clear()
+        last_failure_wall = sim.now
+        outcome = ctl.on_failures(state, failed)
+        controller_seconds += outcome.controller_seconds
+        sim.advance(p.t_controller)
+        if outcome.wipeout:
+            state.reset()
+            step = ckpt_step
+            sim.restart()
+            last_ckpt_wall = sim.now
+            continue
+        # patch computes run in parallel across groups: time = max per-group
+        patch_stacks = 0
+        if outcome.patch:
+            loads: dict[int, int] = {}
+            for w, _ in outcome.patch:
+                loads[w] = loads.get(w, 0) + 1
+            patch_stacks = max(loads.values())
+            work += sim.advance(patch_stacks * p.t_comp)
+            sim.patches += len(outcome.patch)
+        sim.advance(p.t_shrink)
+        work += sim.advance(p.t_allreduce)          # redo the all-reduce
+        step += 1
+        sim.work_since_ckpt += work
+        sim.stacks_since_ckpt += s_a + patch_stacks
+        continue
+    sim.finish()
+    res = _result(sim, "spare", r=r, steps_done=step,
+                  controller_seconds=controller_seconds)
+    return res

@@ -22,6 +22,7 @@ class DESParams:
     t_save: float = 60.0            # T_s — checkpoint save
     t_shrink: float = 0.1           # communicator shrink
     t_controller: float = 0.1       # RECTLR cost (conservative; measured <10ms)
+    t_reconfig: float = 1.0         # adaptive policy-switch reshard cost
     steps: int = 10_000             # training horizon
     failed_allreduce_frac: float = 0.5   # failed all-reduce costs 0.5 * T_a
     jitter_std: float = 0.05        # event jitter ~ N(1, 0.05^2)

@@ -1,0 +1,89 @@
+"""Collective-communication helpers (weighted all-reduce, int8 EF compression).
+
+SPARe's failure masking is, at the wire level, nothing but a *weighted*
+gradient all-reduce: every (group, stack-slot) contributes its partial
+gradient scaled by the supplier weight (``1/N`` for the designated
+supplier of a shard type, ``0`` otherwise — :meth:`repro.core.SpareState
+.device_schedule`), so the collected gradient equals vanilla DP's batch
+gradient for every survivor set (§3.1 invariant). This module is the one
+place that reduction is issued:
+
+* on a real mesh (inside ``pmap``/``shard_map``) pass ``axis_name`` and
+  the helper lowers to a single ``psum`` — failure masking costs zero
+  extra collectives;
+* host-side (laptop-scale emulation, trainers, tests) the same call is a
+  plain weighted contraction with identical numerics.
+
+The int8 error-feedback compressor is a beyond-paper bandwidth
+optimization for the 20 TB-gradient all-reduce (paper Table 1): gradients
+are quantized to int8 with a per-tensor scale (4x traffic reduction) and
+the quantization residual is fed back into the next step's compression,
+making the *cumulative* transmitted signal unbiased (Seide et al. 2014;
+Karimireddy et al. 2019 — EF-SGD).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["weighted_all_reduce", "compress_grad_int8",
+           "decompress_grad_int8"]
+
+_INT8_MAX = 127.0
+
+
+def weighted_all_reduce(values: jax.Array, weights: jax.Array,
+                        axis_name: str | None = None) -> jax.Array:
+    """Supplier-weighted reduction ``Σ_i weights_i · values_i``.
+
+    ``values`` and ``weights`` share a leading contraction shape (the
+    per-example / per-slot axis); the result is the scalar (or trailing-
+    shape) weighted sum. With ``axis_name`` set, the local partial sum is
+    additionally ``psum``-reduced across the named mapped axis — this is
+    the production spelling of the §3.1 weighted all-reduce; without it,
+    the call is the exact host-side emulation.
+    """
+    w = weights.reshape(weights.shape + (1,) * (values.ndim - weights.ndim))
+    local = jnp.sum(values * w.astype(values.dtype),
+                    axis=tuple(range(weights.ndim)))
+    if axis_name is not None:
+        local = jax.lax.psum(local, axis_name)
+    return local
+
+
+def compress_grad_int8(
+    grad: jax.Array, error: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Int8 error-feedback quantization of one gradient tensor.
+
+    Compresses ``grad + error`` (the fresh gradient plus the residual the
+    previous step failed to transmit) to int8 with a shared per-tensor
+    scale, and returns the residual to carry into the next step::
+
+        q, scale, new_error = compress_grad_int8(grad, error)
+        wire_bytes = q          # 1/4 of fp32
+        restored   = decompress_grad_int8(q, scale)
+        # invariant: restored + new_error == grad + error   (exactly)
+
+    Returns ``(q, scale, new_error)`` where ``q`` is int8 with the same
+    shape as ``grad``, ``scale`` is the scalar dequantization step, and
+    ``new_error = (grad + error) - decompress(q, scale)``.
+
+    The max quantization error of a single step is ``scale/2 <= scale``;
+    with error feedback the *cumulative* transmitted signal converges to
+    the cumulative true gradient, which is what makes aggressive 8-bit
+    compression safe for SGD-family optimizers.
+    """
+    x = grad + error
+    scale = jnp.max(jnp.abs(x)) / _INT8_MAX
+    # all-zero tensors: keep scale 0 (q == 0, decompress == 0) but avoid
+    # the 0/0 in the quantization divide
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
+    new_error = x - q.astype(x.dtype) * scale
+    return q, scale, new_error
+
+
+def decompress_grad_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`compress_grad_int8`: ``q * scale`` in fp32."""
+    return q.astype(jnp.float32) * scale

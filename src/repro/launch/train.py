@@ -25,6 +25,9 @@ def main() -> None:
     ap.add_argument("--per-type-batch", type=int, default=2)
     ap.add_argument("--mtbf-steps", type=float, default=0.0,
                     help="inject failures every ~K steps (0 = none)")
+    ap.add_argument("--scheme", default="spare",
+                    help="fault-tolerance scheme (repro.des registry: "
+                         "spare | replication | ckpt_only | adaptive)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
@@ -34,6 +37,7 @@ def main() -> None:
 
     from repro.configs import get_config, smoke_config
     from repro.core.theory import r_star
+    from repro.des import get_scheme
     from repro.train.trainer import PoissonInjector, SpareTrainer
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -41,12 +45,15 @@ def main() -> None:
     r = args.redundancy or max(2, min(r_star(args.n_groups),
                                       args.n_groups - 1))
     print(f"[train] arch={args.arch} N={args.n_groups} r={r} "
-          f"steps={args.steps} params={cfg.param_count():,}")
+          f"scheme={args.scheme} steps={args.steps} "
+          f"params={cfg.param_count():,}")
 
+    scheme_kwargs = {} if args.scheme == "ckpt_only" else {"r": r}
     trainer = SpareTrainer(cfg, n_groups=args.n_groups, redundancy=r,
                            seq=args.seq, per_type_batch=args.per_type_batch,
                            seed=args.seed, ckpt_dir=args.ckpt_dir,
-                           base_lr=args.lr, total_steps=args.steps)
+                           base_lr=args.lr, total_steps=args.steps,
+                           scheme=get_scheme(args.scheme, **scheme_kwargs))
     injector = (PoissonInjector(args.mtbf_steps, seed=args.seed)
                 if args.mtbf_steps > 0 else None)
     t0 = time.time()

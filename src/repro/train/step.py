@@ -25,18 +25,26 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.dist.collectives import weighted_all_reduce
 from repro.models.model import Model
 from repro.optim import adamw_update, cosine_lr
 
 __all__ = ["weighted_loss", "make_train_step", "make_serve_step"]
 
 
-def weighted_loss(model: Model, params: Any, micro: dict) -> jax.Array:
+def weighted_loss(model: Model, params: Any, micro: dict,
+                  axis_name: str | None = None) -> jax.Array:
     """Per-example-weighted CE over one microbatch.
 
     micro: tokens/embeds (b, S[, D]), labels (b, S), weights (b,).
     Returns sum_b weights[b] * mean-CE(example b). With SPARe weights this
     sums to (1/N) * sum-over-types of per-type mean loss == vanilla DP loss.
+
+    The supplier-weighted reduction routes through
+    :func:`repro.dist.collectives.weighted_all_reduce` — the single place
+    the §3.1 weighted all-reduce is issued. Host-side (the emulated
+    trainer) it is a weighted contraction; on a real mesh pass
+    ``axis_name`` and it additionally psums across the data axis.
     """
     logits = model.forward(params, tokens=micro.get("tokens"),
                            embeds=micro.get("embeds"))
@@ -45,7 +53,7 @@ def weighted_loss(model: Model, params: Any, micro: dict) -> jax.Array:
     picked = jnp.take_along_axis(logits, micro["labels"][..., None],
                                  axis=-1)[..., 0]
     ce = jnp.mean(lse - picked, axis=-1)           # (b,) per-example mean
-    return jnp.sum(ce * micro["weights"])
+    return weighted_all_reduce(ce, micro["weights"], axis_name=axis_name)
 
 
 def make_train_step(model: Model, *, base_lr: float = 3e-4,

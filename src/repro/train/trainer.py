@@ -9,12 +9,16 @@ Glues every substrate together:
        |
   checkpoint manager (Eq.-1 interval, in-memory snapshot + disk)
 
-Failure handling per Alg. 1:
+Failure handling per Alg. 1, delegated to a pluggable
+:class:`repro.des.FaultToleranceScheme` (the *same* scheme objects the
+DES simulates — ``trainer.scheme.recover(state, failed)`` is the
+protocol decision point shared by both):
   * injected node failures are detected "at the all-reduce" — i.e. the
     trainer consults the injector after dispatching a step and, on
-    failure, discards that step's update (the all-reduce failed), runs
-    RECTLR, performs patch compute by re-dispatching with the updated
-    schedule, and continues;
+    failure, discards that step's update (the all-reduce failed), asks
+    the scheme for a recovery decision (RECTLR for SPARe), performs
+    patch compute by re-dispatching with the updated schedule, and
+    continues;
   * wipe-out -> global restart: state.reset(), rollback to the last
     snapshot (in-memory tier) or disk checkpoint;
   * S_A changes recompile the step once per depth (cached).
@@ -37,6 +41,7 @@ import numpy as np
 from repro.ckpt import CheckpointManager
 from repro.core import Rectlr, SpareState
 from repro.data import ShardedTokenPipeline, spare_batch
+from repro.des import DESParams, FaultToleranceScheme, get_scheme
 from repro.models import build_model
 from repro.models.config import ModelConfig
 from repro.optim import adamw_init
@@ -46,12 +51,20 @@ __all__ = ["SpareTrainer", "PoissonInjector", "TrainReport"]
 
 
 class PoissonInjector:
-    """Host-side failure injector: exponential arrivals in *step* time."""
+    """Host-side failure injector: exponential arrivals in *step* time.
+
+    ``mean_steps_between_failures`` is the *system* mean when ``n_groups``
+    is 0 (the default), or the *per-group* mean when ``n_groups`` is
+    given — the aggregate arrival rate then scales with cluster size
+    (``mean / n_groups`` steps between system failures), matching the
+    DES's rate-∝-active-GPUs failure model.
+    """
 
     def __init__(self, mean_steps_between_failures: float, seed: int = 0,
                  n_groups: int = 0):
         self.rng = np.random.default_rng(seed)
-        self.mean = mean_steps_between_failures
+        self.mean = (mean_steps_between_failures / n_groups if n_groups > 0
+                     else mean_steps_between_failures)
         self.next_at = self.rng.exponential(self.mean)
         self.clock = 0.0
 
@@ -84,10 +97,19 @@ class SpareTrainer:
                  seq: int = 128, per_type_batch: int = 2, seed: int = 0,
                  ckpt_dir: str | None = None, mtbf: float = 300.0,
                  t_save: float = 60.0, t_restart: float = 3600.0,
-                 base_lr: float = 3e-4, total_steps: int = 1000):
+                 base_lr: float = 3e-4, total_steps: int = 1000,
+                 scheme: FaultToleranceScheme | None = None):
         self.cfg = cfg
         self.state = SpareState(n_groups, redundancy)
-        self.ctl = Rectlr()
+        # recovery policy: any registered FaultToleranceScheme; defaults to
+        # SPARe (Alg. 1/2). `ctl` stays exposed for direct controller pokes
+        # (tests, deep dives) and aliases the scheme's own controller so
+        # both views mutate the same bookkeeping.
+        self.scheme = scheme if scheme is not None \
+            else get_scheme("spare", r=redundancy)
+        self.scheme.prepare(DESParams(n=n_groups, mtbf=mtbf, t_save=t_save,
+                                      t_restart=t_restart))
+        self.ctl = getattr(self.scheme, "ctl", None) or Rectlr()
         self.model = build_model(cfg)
         self.pipeline = ShardedTokenPipeline(cfg, seq, per_type_batch,
                                              seed=seed)
@@ -129,9 +151,11 @@ class SpareTrainer:
         while self.step < target:
             failed = injector(self.state) if injector is not None else []
             if failed:
-                # detection at the all-reduce: the in-flight step fails
+                # detection at the all-reduce: the in-flight step fails;
+                # the pluggable scheme decides wipe-out vs. mask/reorder
                 report.failures += len(failed)
-                outcome = self.ctl.on_failures(self.state, failed)
+                outcome = self.scheme.recover(self.state, failed,
+                                              step=self.step)
                 report.controller_seconds += outcome.controller_seconds
                 if outcome.wipeout:
                     report.wipeouts += 1

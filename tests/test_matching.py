@@ -7,8 +7,11 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # pragma: no cover
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.golomb import host_sets
 from repro.core.matching import IncrementalMatcher, hopcroft_karp, min_cost_assignment

@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # pragma: no cover
+    from _hypothesis_compat import given, settings, st
 
 from repro.models.config import ModelConfig, MoEConfig, SSMConfig
 from repro.models.moe import expert_ffn_local, moe_ffn_reference, route_topk

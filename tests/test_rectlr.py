@@ -1,8 +1,11 @@
 """RECTLR controller tests: Alg. 2 phases, Fig. 3 walkthrough, properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # pragma: no cover
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import Rectlr, SpareState
 from repro.core.theory import capacity

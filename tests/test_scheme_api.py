@@ -1,0 +1,291 @@
+"""FaultToleranceScheme API: registry, engine parity, adaptive policy.
+
+Parity tests prove the schemes ported onto the shared engine
+(:mod:`repro.des.engine`) reproduce the frozen pre-refactor loops
+(:mod:`repro.des._legacy`) bit-for-bit: same RNG-draw order, hence equal
+walls, committed work, and event counts at every fixed seed.
+"""
+import numpy as np
+import pytest
+
+from repro.des import (
+    AdaptiveScheme,
+    DESParams,
+    FaultToleranceScheme,
+    get_scheme,
+    list_schemes,
+    register_scheme,
+    run_scheme,
+    simulate_spare,
+)
+from repro.des._legacy import (
+    legacy_ckpt_only,
+    legacy_replication,
+    legacy_spare,
+)
+
+# controller_seconds is wall-clock-measured (perf_counter) inside RECTLR,
+# so it is excluded from bit-for-bit comparison
+_EXACT_FIELDS = ("scheme", "n", "r", "wall", "committed", "t0", "steps_done",
+                 "node_failures", "wipeouts", "ckpt_count", "total_stacks",
+                 "patches")
+
+
+def assert_bitwise_equal(a, b):
+    for f in _EXACT_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (
+            f"{f}: engine={getattr(a, f)!r} legacy={getattr(b, f)!r}")
+
+
+def short(n=200, steps=200, **kw):
+    return DESParams(n=n, steps=steps).with_(**kw)
+
+
+# ------------------------------------------------------------------ #
+# registry round-trip                                                 #
+# ------------------------------------------------------------------ #
+def test_registry_lists_all_builtin_schemes():
+    assert list_schemes() == ["adaptive", "ckpt_only", "replication", "spare"]
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("ckpt_only", {}),
+    ("replication", {"r": 3}),
+    ("spare", {"r": 9}),
+    ("adaptive", {"r": 9}),
+])
+def test_registry_round_trip(name, kwargs):
+    scheme = get_scheme(name, **kwargs)
+    assert isinstance(scheme, FaultToleranceScheme)
+    assert scheme.name == name
+    res = scheme.simulate(short(steps=50), seed=0)
+    assert res.scheme == name
+    assert res.steps_done > 0
+
+
+def test_unknown_scheme_raises_with_candidates():
+    with pytest.raises(KeyError, match="spare"):
+        get_scheme("does_not_exist")
+
+
+def test_register_scheme_extends_registry():
+    @register_scheme
+    class NullScheme(get_scheme("ckpt_only").__class__):
+        name = "null_test_scheme"
+
+    try:
+        assert "null_test_scheme" in list_schemes()
+        assert isinstance(get_scheme("null_test_scheme"), NullScheme)
+    finally:
+        from repro.des.schemes import _REGISTRY
+        _REGISTRY.pop("null_test_scheme")
+
+
+def test_predicted_overhead_delegates_to_theory():
+    p = short()
+    j_ckpt = get_scheme("ckpt_only").predicted_overhead(p)
+    j_spare = get_scheme("spare", r=9).predicted_overhead(p)
+    j_rep = get_scheme("replication", r=2).predicted_overhead(p)
+    # restart-dominant Table-1 regime: SPARe's closed form must win
+    assert j_spare < j_rep < j_ckpt
+    # adaptive predicts the envelope
+    j_ad = get_scheme("adaptive", r=9).predicted_overhead(p)
+    assert j_ad == min(j_ckpt, j_spare, j_rep)
+
+
+# ------------------------------------------------------------------ #
+# bit-for-bit parity with the legacy loops                            #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("seed", [0, 1, 7, 123])
+def test_parity_ckpt_only(seed):
+    p = short()
+    assert_bitwise_equal(get_scheme("ckpt_only").simulate(p, seed=seed),
+                         legacy_ckpt_only(p, seed=seed))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+@pytest.mark.parametrize("r", [2, 3, 4])
+def test_parity_replication(r, seed):
+    p = short()
+    assert_bitwise_equal(get_scheme("replication", r=r).simulate(p, seed=seed),
+                         legacy_replication(p, r=r, seed=seed))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+@pytest.mark.parametrize("r", [2, 6, 9])
+def test_parity_spare(r, seed):
+    p = short()
+    assert_bitwise_equal(get_scheme("spare", r=r).simulate(p, seed=seed),
+                         legacy_spare(p, r=r, seed=seed))
+
+
+@pytest.mark.parametrize("kwargs", [
+    {"dynamic_ckpt": True},
+    {"binary_search": True},
+    {"straggler_frac": 0.05, "straggler_slowdown": 5.0},
+    {"dynamic_ckpt": True, "straggler_frac": 0.05},
+])
+def test_parity_spare_feature_flags(kwargs):
+    p = short()
+    assert_bitwise_equal(
+        get_scheme("spare", r=9, **kwargs).simulate(p, seed=3),
+        legacy_spare(p, r=9, seed=3, **kwargs))
+
+
+def test_parity_exponential_law_and_explicit_tc():
+    p = short(failure_law="exponential")
+    assert_bitwise_equal(
+        get_scheme("spare", r=9).simulate(p, seed=0, t_c=500.0),
+        legacy_spare(p, r=9, seed=0, t_c=500.0))
+    assert_bitwise_equal(
+        get_scheme("ckpt_only").simulate(p, seed=0, max_wall=1e5),
+        legacy_ckpt_only(p, seed=0, max_wall=1e5))
+
+
+def test_deprecated_aliases_still_work_and_warn():
+    p = short(steps=50)
+    with pytest.deprecated_call():
+        res = simulate_spare(p, r=9, seed=0)
+    assert_bitwise_equal(res, legacy_spare(p, r=9, seed=0))
+
+
+def test_scheme_instance_is_reusable_across_runs():
+    """bind() must fully reset per-run state: back-to-back simulate calls
+    at the same seed give identical results."""
+    p = short(steps=150)
+    scheme = get_scheme("spare", r=6)
+    a = scheme.simulate(p, seed=5)
+    b = scheme.simulate(p, seed=5)
+    assert_bitwise_equal(a, b)
+
+
+# ------------------------------------------------------------------ #
+# adaptive scheme                                                     #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("mtbf", [1e9, 1000.0, 300.0])
+def test_adaptive_tracks_best_fixed_scheme(mtbf):
+    """Acceptance criterion: on a mixed-MTBF sweep (quiet / moderate /
+    restart-dominant) the adaptive selector's wall-clock is within 5% of
+    the best single fixed scheme."""
+    p = short(steps=250, mtbf=mtbf)
+    ad = get_scheme("adaptive", r=9).simulate(p, seed=0)
+    fixed = [
+        get_scheme("ckpt_only").simulate(p, seed=0).wall,
+        get_scheme("replication", r=2).simulate(p, seed=0).wall,
+        get_scheme("spare", r=9).simulate(p, seed=0).wall,
+    ]
+    assert ad.steps_done == p.steps
+    assert ad.wall <= min(fixed) * 1.05
+
+
+def test_adaptive_switches_out_of_wrong_initial_mode():
+    """Forced to start as vanilla ckpt-only in the restart-dominant
+    regime, the selector must learn the observed rate and move to SPARe,
+    landing near the pure-SPARe wall instead of the ckpt-only disaster."""
+    p = short(steps=250)   # MTBF 300 s — Table-1 storm
+    ad_scheme = AdaptiveScheme(r=9, initial="ckpt_only")
+    ad = run_scheme(ad_scheme, p, seed=0)
+    spare = get_scheme("spare", r=9).simulate(p, seed=0)
+    ckpt = get_scheme("ckpt_only").simulate(p, seed=0)
+    assert ad.mode_switches >= 1
+    assert ad_scheme.mode_name == "spare"
+    assert ad.wall < ckpt.wall * 0.25          # escaped the disaster
+    assert ad.wall <= spare.wall * 1.25        # close to the oracle policy
+    # the history log records the trajectory
+    assert [m for _, m in ad_scheme.history][0] == "ckpt_only"
+    assert [m for _, m in ad_scheme.history][-1] == "spare"
+
+
+def test_adaptive_stays_cheap_on_quiet_cluster():
+    p = short(steps=200, mtbf=1e12, jitter_std=0.0)
+    ad_scheme = AdaptiveScheme(r=9)
+    res = run_scheme(ad_scheme, p, seed=0)
+    assert ad_scheme.mode_name in ("ckpt_only", "spare")  # 1-stack policies
+    assert res.mode_switches == 0
+    assert res.ttt_norm == pytest.approx(1.0, abs=0.05)
+
+
+def test_adaptive_result_metadata():
+    res = get_scheme("adaptive", r=9).simulate(short(steps=80), seed=1)
+    assert res.scheme == "adaptive"
+    assert res.r == 9
+    assert res.mode_switches >= 0
+
+
+# ------------------------------------------------------------------ #
+# engine/result invariants                                            #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("name,kwargs", [
+    ("ckpt_only", {}),
+    ("replication", {"r": 3}),
+    ("spare", {"r": 9}),
+    ("adaptive", {"r": 9}),
+])
+def test_availability_bounded(name, kwargs):
+    res = get_scheme(name, **kwargs).simulate(short(steps=120), seed=2)
+    assert 0.0 < res.availability <= 1.0
+    assert res.wall >= res.committed
+
+
+def test_trainer_consumes_scheme_object():
+    """The trainer's recovery decisions go through the same scheme API the
+    DES runs on (ckpt_only scheme => every failure is a wipe-out)."""
+    from repro.core import SpareState
+
+    state = SpareState(8, 3)
+    ck = get_scheme("ckpt_only")
+    out = ck.recover(state, [1])
+    assert out.wipeout
+
+    sp = get_scheme("spare", r=3)
+    state2 = SpareState(8, 3)
+    out2 = sp.recover(state2, [1])
+    assert not out2.wipeout
+    assert state2.prefix_coverage().all()
+
+
+def test_adaptive_live_protocol_switches_on_observed_storm():
+    """Trainer-facing adaptation (prepare/recover, no DES clock): forced
+    to start as ckpt-only, the selector must re-evaluate at the wipe-out
+    boundary from the step-time failure rate and move to SPARe."""
+    from repro.core import SpareState
+
+    ad = AdaptiveScheme(r=4, initial="ckpt_only")
+    ad.prepare(DESParams(n=16, mtbf=300.0))
+    assert ad.mode_name == "ckpt_only"
+    state = SpareState(16, 4)
+    out = ad.recover(state, [3], step=5)     # ckpt_only: instant wipe-out
+    assert out.wipeout
+    assert ad.mode_name == "spare"           # observed storm => SPARe
+    assert ad.mode_switches == 1
+    state.reset()
+    out2 = ad.recover(state, [3], step=10)   # now masked, not wiped
+    assert not out2.wipeout
+    assert state.prefix_coverage().all()
+
+
+def test_adaptive_live_prepare_picks_prior_best_mode():
+    quiet = AdaptiveScheme(r=4)
+    quiet.prepare(DESParams(n=16, mtbf=1e12))
+    assert quiet.mode_name == "ckpt_only"    # no failures => cheapest
+
+    storm = AdaptiveScheme(r=4)
+    storm.prepare(DESParams(n=16, mtbf=300.0))
+    assert storm.mode_name == "spare"
+
+
+def test_poisson_injector_scales_rate_with_n_groups():
+    """Regression: n_groups used to be silently ignored."""
+    from repro.train.trainer import PoissonInjector
+
+    per_group = PoissonInjector(40.0, seed=0, n_groups=8)
+    system = PoissonInjector(40.0, seed=0, n_groups=0)
+    assert per_group.mean == pytest.approx(5.0)
+    assert system.mean == pytest.approx(40.0)
+
+    # rate actually applies to the arrivals: ~n/5 failures in n steps
+    class _State:
+        survivors = np.arange(8)
+
+    hits = sum(len(per_group(_State())) for _ in range(400))
+    assert 50 <= hits <= 110   # mean 80
