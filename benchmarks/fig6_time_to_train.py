@@ -1,44 +1,51 @@
 """Fig. 6 — normalized time-to-train J(r): SPARe+CKPT vs Rep+CKPT from the
-discrete-event simulation, with the Eq.-7 theory curve."""
+discrete-event simulation, with the Eq.-7 theory curve.
+
+Runs on the scenario-campaign runner (process-parallel with ``--jobs``,
+deterministic per-cell seeding)."""
 from __future__ import annotations
 
 from repro.core.theory import j_normalized
-from repro.des import DESParams, get_scheme
+from repro.scenarios import CampaignSpec, run_campaign
 
-from .common import save_csv, timed
+from .common import save_csv
 
 HEADER = "name,us_per_call,derived"
 
+_MODEL = [{"kind": "weibull", "label": "weibull"}]
 
-def run(quick: bool = True) -> list[str]:
-    rows = []
+
+def run(quick: bool = True, jobs: int = 1) -> list[str]:
     steps = 1200 if quick else 10_000
-    seeds = (0,) if quick else (0, 1, 2)
-    ns = (200,) if quick else (200, 600, 1000)
+    seeds = [0] if quick else [0, 1, 2]
+    ns = [200] if quick else [200, 600, 1000]
+    rep = CampaignSpec(name="fig6_rep", schemes=["replication"], ns=ns,
+                       rs=[2, 3, 4, 6], models=_MODEL, seeds=seeds,
+                       steps=steps)
+    spare = CampaignSpec(name="fig6_spare", schemes=["spare"], ns=ns,
+                         rs=[2, 3, 4, 6, 9, 12], models=_MODEL, seeds=seeds,
+                         steps=steps)
+    results = run_campaign(rep.cells() + spare.cells(), jobs=jobs)
+
+    cells: dict[tuple, list[dict]] = {}
+    for row in results:
+        cells.setdefault((row["scheme"], row["n"], row["r"]), []).append(row)
+
+    def _mean(group: list[dict], field: str) -> float:
+        return sum(r[field] for r in group) / len(group)
+
+    rows = []
     for n in ns:
-        p = DESParams(n=n, steps=steps)
         for r in (2, 3, 4, 6):
-            vals = []
-            us = 0.0
-            for s in seeds:
-                res, t = timed(get_scheme("replication", r=r).simulate,
-                               p, seed=s, repeat=1)
-                vals.append(res.ttt_norm)
-                us += t
+            g = cells[("replication", n, r)]
             rows.append(
-                f"fig6_rep[N={n} r={r}],{us / len(seeds):.0f},"
-                f"ttt={sum(vals) / len(vals):.3f}")
+                f"fig6_rep[N={n} r={r}],{_mean(g, 'elapsed_s') * 1e6:.0f},"
+                f"ttt={_mean(g, 'ttt_norm'):.3f}")
         for r in (2, 3, 4, 6, 9, 12):
-            vals = []
-            us = 0.0
-            for s in seeds:
-                res, t = timed(get_scheme("spare", r=r).simulate,
-                               p, seed=s, repeat=1)
-                vals.append(res.ttt_norm)
-                us += t
+            g = cells[("spare", n, r)]
             rows.append(
-                f"fig6_spare[N={n} r={r}],{us / len(seeds):.0f},"
-                f"ttt={sum(vals) / len(vals):.3f};"
+                f"fig6_spare[N={n} r={r}],{_mean(g, 'elapsed_s') * 1e6:.0f},"
+                f"ttt={_mean(g, 'ttt_norm'):.3f};"
                 f"theory_J={j_normalized(r, n):.3f}")
     save_csv("fig6_time_to_train", rows, HEADER)
     return rows

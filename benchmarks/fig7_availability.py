@@ -1,29 +1,34 @@
 """Fig. 7 — empirical availability of SPARe+CKPT vs the theoretical
-projection A*(mu(N,r) m) (Eq. 2)."""
+projection A*(mu(N,r) m) (Eq. 2). Campaign-runner backed (``--jobs``)."""
 from __future__ import annotations
 
 from repro.core.theory import SystemTimes, availability_star, mu
-from repro.des import DESParams, get_scheme
+from repro.scenarios import CampaignSpec, run_campaign
 
-from .common import save_csv, timed
+from .common import save_csv
 
 HEADER = "name,us_per_call,derived"
 
 
-def run(quick: bool = True) -> list[str]:
-    rows = []
+def run(quick: bool = True, jobs: int = 1) -> list[str]:
     steps = 1200 if quick else 10_000
-    ns = (200,) if quick else (200, 600, 1000)
+    ns = [200] if quick else [200, 600, 1000]
     times = SystemTimes()
+    spec = CampaignSpec(name="fig7", schemes=["spare"], ns=ns,
+                        rs=[3, 6, 9, 12],
+                        models=[{"kind": "weibull", "label": "weibull"}],
+                        seeds=[0], steps=steps)
+    results = run_campaign(spec.cells(), jobs=jobs)
+    cells = {(row["n"], row["r"]): row for row in results}
+
+    rows = []
     for n in ns:
-        p = DESParams(n=n, steps=steps)
         for r in (3, 6, 9, 12):
-            res, us = timed(get_scheme("spare", r=r).simulate,
-                            p, seed=0, repeat=1)
+            res = cells[(n, r)]
             a_theory = availability_star(mu(n, r) * times.mtbf_node,
                                          times.t_save, times.t_restart)
             rows.append(
-                f"fig7_avail[N={n} r={r}],{us:.0f},"
-                f"sim={res.availability:.4f};theory={a_theory:.4f}")
+                f"fig7_avail[N={n} r={r}],{res['elapsed_s'] * 1e6:.0f},"
+                f"sim={res['availability']:.4f};theory={a_theory:.4f}")
     save_csv("fig7_availability", rows, HEADER)
     return rows

@@ -1,29 +1,34 @@
 """Fig. 8 — average stacks computed per training step (empirical
 computation overhead) vs the Eq.-5 prediction; paper reports <= 4 %
-absolute error."""
+absolute error. Campaign-runner backed (``--jobs``)."""
 from __future__ import annotations
 
 from repro.core.theory import s_bar
-from repro.des import DESParams, get_scheme
+from repro.scenarios import CampaignSpec, run_campaign
 
-from .common import save_csv, timed
+from .common import save_csv
 
 HEADER = "name,us_per_call,derived"
 
 
-def run(quick: bool = True) -> list[str]:
-    rows = []
+def run(quick: bool = True, jobs: int = 1) -> list[str]:
     steps = 1200 if quick else 10_000
-    ns = (200,) if quick else (200, 600, 1000)
+    ns = [200] if quick else [200, 600, 1000]
+    spec = CampaignSpec(name="fig8", schemes=["spare"], ns=ns,
+                        rs=[3, 6, 9, 12],
+                        models=[{"kind": "weibull", "label": "weibull"}],
+                        seeds=[0], steps=steps)
+    results = run_campaign(spec.cells(), jobs=jobs)
+    cells = {(row["n"], row["r"]): row for row in results}
+
+    rows = []
     for n in ns:
-        p = DESParams(n=n, steps=steps)
         for r in (3, 6, 9, 12):
-            res, us = timed(get_scheme("spare", r=r).simulate,
-                            p, seed=0, repeat=1)
+            res = cells[(n, r)]
             pred = s_bar(n, r)
             rows.append(
-                f"fig8_stacks[N={n} r={r}],{us:.0f},"
-                f"sim={res.avg_stacks:.3f};eq5={pred:.3f};"
-                f"abs_err={abs(res.avg_stacks - pred):.3f}")
+                f"fig8_stacks[N={n} r={r}],{res['elapsed_s'] * 1e6:.0f},"
+                f"sim={res['avg_stacks']:.3f};eq5={pred:.3f};"
+                f"abs_err={abs(res['avg_stacks'] - pred):.3f}")
     save_csv("fig8_stacks", rows, HEADER)
     return rows

@@ -6,11 +6,17 @@ Prints ``name,us_per_call,derived`` CSV rows (also saved under
 the default quick mode validates every claim at reduced scale in
 minutes.
 
+DES/Monte-Carlo suites (fig6/fig7/fig8/tablesC) run on the scenario
+campaign runner and fan out across ``--jobs`` worker processes with
+deterministic per-cell seeding (results identical at any worker count).
+
   PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,table2]
+                                          [--jobs 4]
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -47,6 +53,8 @@ def main() -> None:
                     help="paper-scale horizons/trials (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for campaign-backed suites")
     args = ap.parse_args()
 
     names = (args.only.split(",") if args.only else list(SUITES))
@@ -58,7 +66,10 @@ def main() -> None:
                   file=sys.stderr)
             continue
         t1 = time.time()
-        for row in SUITES[name].run(quick=not args.full):
+        run_fn = SUITES[name].run
+        kw = ({"jobs": args.jobs}
+              if "jobs" in inspect.signature(run_fn).parameters else {})
+        for row in run_fn(quick=not args.full, **kw):
             print(row)
         print(f"# {name} done in {time.time() - t1:.1f}s", file=sys.stderr)
     print(f"# all suites done in {time.time() - t0:.1f}s", file=sys.stderr)

@@ -3,7 +3,10 @@
 Reproduces the paper's Fig. 3 walkthrough (N=9, r=3) then drives a larger
 (N=32, r=5) system through a full random failure trail until wipe-out,
 printing per-event controller decisions — and verifies the §3.1 gradient
-invariant at every stage against a vanilla-DP oracle.
+invariant at every stage against a vanilla-DP oracle. Finally contrasts
+SPARe against replication under a *correlated rack-burst* failure regime
+(repro.scenarios), where whole racks of groups die simultaneously —
+the regime production traces report, not the paper's i.i.d. one.
 
 Run:  PYTHONPATH=src python examples/failure_masking_deep_dive.py
 """
@@ -60,3 +63,30 @@ for failures in ([], [2], [5], [7]):
         ref, got))
     print(f"after failing {failures or 'nobody'}: S_A={tr.state.s_a}, "
           f"max |g_spare - g_vanilla| = {diff:.2e}")
+
+# ---------------------------------------------------------------- #
+print("\n== SPARe vs replication under correlated rack bursts ==")
+from repro.des import DESParams, get_scheme
+from repro.scenarios import ClusterTopology, model_from_spec
+
+p = DESParams(n=200, steps=400)
+topo = ClusterTopology(n_groups=200, hosts_per_rack=8)
+regimes = {
+    "iid weibull (paper Sec. 5)": {"kind": "weibull"},
+    "rack bursts (25% of events kill a rack)":
+        {"kind": "correlated", "scope": "rack", "burst_prob": 0.25},
+}
+print(f"{'regime':44s} {'scheme':14s} {'ttt/T0':>7s} {'avail':>6s} "
+      f"{'wipeouts':>8s}")
+for label, spec in regimes.items():
+    for name, kw in (("spare", {"r": 9}), ("replication", {"r": 2})):
+        res = get_scheme(name, **kw).simulate(
+            p, seed=0, failure_model=model_from_spec(spec), topology=topo)
+        print(f"{label:44s} {name:14s} {res.ttt_norm:7.2f} "
+              f"{res.availability:6.3f} {res.wipeouts:8d}")
+print("""
+Rack bursts hit replication hardest: degree-2 replication dies whenever
+both hosts of a type share the blast radius, while SPARe's cyclic-Golomb
+placement spreads each type's r hosts across racks — exactly the
+placement-diversity argument of Thm. 4.1, now visible under a failure
+regime the paper never simulated.""")

@@ -167,22 +167,59 @@ class IncrementalMatcher:
         return False
 
     def _try_assign_evict(self, i: int, visited: list[bool], banned: int) -> bool:
-        for w in self.hosts[i]:
-            if w == banned or not self.alive[w] or visited[w]:
-                continue
-            visited[w] = True
-            if self.cap[w] > 0:
-                self.cap[w] -= 1
-                self.assign[i] = w
-                self.load[w].append(i)
-                return True
-            for j in list(self.load[w]):
-                if self._try_assign_evict(j, visited, banned=w):
-                    self.load[w].remove(j)
-                    self.assign[i] = w
-                    self.load[w].append(i)
-                    return True
-        return False
+        """Iterative alternating-path search (same traversal order as the
+        natural recursion, but eviction chains grow one frame per displaced
+        type — at N=1000 that exceeds CPython's default recursion limit,
+        so the stack is explicit)."""
+        # frame: [type, banned group, next host index, current eviction
+        #         group (or -1), load snapshot, next load index]
+        frames = [[i, banned, 0, -1, None, 0]]
+        result: bool | None = None
+        while frames:
+            f = frames[-1]
+            ftype, fban, _, fw, floads, fli = f
+            if result is True:
+                # child relocated floads[fli] out of fw: take its slot
+                j = floads[fli]
+                self.load[fw].remove(j)
+                self.assign[ftype] = fw
+                self.load[fw].append(ftype)
+                frames.pop()
+                continue                    # result stays True: unwind
+            if result is False:
+                f[5] = fli = fli + 1        # next eviction candidate
+                result = None
+            if fw >= 0:
+                if fli < len(floads):
+                    frames.append([floads[fli], fw, 0, -1, None, 0])
+                    continue
+                f[3] = fw = -1              # loads exhausted: scan on
+            hosts_i = self.hosts[ftype]
+            progressed = False
+            while f[2] < len(hosts_i):
+                w = hosts_i[f[2]]
+                f[2] += 1
+                if w == fban or not self.alive[w] or visited[w]:
+                    continue
+                visited[w] = True
+                if self.cap[w] > 0:
+                    self.cap[w] -= 1
+                    self.assign[ftype] = w
+                    self.load[w].append(ftype)
+                    frames.pop()
+                    result = True
+                    progressed = True
+                    break
+                # full group: suspend here and try evicting its types
+                f[3] = w
+                f[4] = list(self.load[w])
+                f[5] = 0
+                progressed = True
+                break
+            if not progressed:
+                frames.pop()
+                result = False
+        return bool(result)
 
     def initialise(self) -> bool:
         """Build the initial matching (depth slots per group)."""

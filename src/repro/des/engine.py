@@ -47,7 +47,6 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .failures import FailureProcess
 from .params import DESParams
 
 __all__ = ["SimResult", "SimClock", "FailureRecovery", "FaultToleranceScheme",
@@ -85,18 +84,31 @@ class SimResult:
 
 
 class SimClock:
-    """Shared clock / failure-stream / accounting plumbing."""
+    """Shared clock / failure-stream / accounting plumbing.
 
-    def __init__(self, p: DESParams, seed: int):
+    Failure arrivals and victim selection are delegated to a pluggable
+    :class:`repro.scenarios.models.FailureModel`; the default
+    ``RenewalModel`` draws *exactly* the sequence the pre-scenario clock
+    drew (one interval via ``FailureProcess``, one uniform victim), so
+    the legacy parity tests stay bit-for-bit. Non-default models may
+    kill several groups per event (rack/pod bursts, trace replay) —
+    every victim lands in ``pending`` and the scheme's ``on_failure``
+    sees the whole simultaneous-failure set.
+    """
+
+    def __init__(self, p: DESParams, seed: int, failure_model=None,
+                 topology=None):
+        from ..scenarios.models import RenewalModel   # avoid import cycle
         self.p = p
         self.rng = np.random.default_rng(seed)
-        self.proc = FailureProcess(
-            p.mtbf, p.weibull_shape, self.rng, law=p.failure_law,
-            scale_with_survivors=p.scale_rate_with_survivors,
-        )
+        self.topology = topology
+        self.model = failure_model if failure_model is not None \
+            else RenewalModel()
+        self.model.bind(p, self.rng, topology)
+        self.proc = getattr(self.model, "proc", None)  # legacy attribute
         self.now = 0.0
         self.alive = p.n
-        self.next_fail = self.proc.next_arrival(0.0, self.alive, p.n)
+        self.next_fail = self.model.next_arrival(0.0, self.alive, p.n)
         self.pending: list[int] = []        # failed groups awaiting detection
         self.dead: set[int] = set()
         # accounting
@@ -120,23 +132,18 @@ class SimClock:
         dur = duration * self.jitter()
         end = self.now + dur
         while self.next_fail <= end and self.alive > 0:
-            victim = self._draw_victim()
-            if victim is not None:
+            for victim in self.model.draw_victims(self.next_fail, self.dead):
+                if victim in self.dead:
+                    continue
                 self.pending.append(victim)
                 self.dead.add(victim)
                 self.alive -= 1
                 self.node_failures += 1
-            self.next_fail = self.proc.next_arrival(
+            self.next_fail = self.model.next_arrival(
                 self.next_fail, max(self.alive, 1), self.p.n
             )
         self.now = end
         return dur
-
-    def _draw_victim(self) -> int | None:
-        candidates = [w for w in range(self.p.n) if w not in self.dead]
-        if not candidates:
-            return None
-        return int(self.rng.choice(candidates))
 
     def restart(self) -> None:
         """Global restart: T_r downtime, full capacity restored, progress
@@ -149,7 +156,7 @@ class SimClock:
         self.wipeouts += 1
         self.work_since_ckpt = 0.0
         self.stacks_since_ckpt = 0.0
-        self.next_fail = self.proc.next_arrival(self.now, self.alive, self.p.n)
+        self.next_fail = self.model.reset(self.now, self.alive, self.p.n)
 
     def checkpoint(self) -> None:
         self.advance(self.p.t_save)
@@ -308,22 +315,34 @@ class FaultToleranceScheme:
     # ---------------------------------------------------------------- #
     def simulate(self, p: DESParams, seed: int = 0,
                  t_c: float | None = None,
-                 max_wall: float | None = None) -> SimResult:
-        """Run this scheme through the shared engine."""
-        return run_scheme(self, p, seed=seed, t_c=t_c, max_wall=max_wall)
+                 max_wall: float | None = None,
+                 failure_model=None, topology=None) -> SimResult:
+        """Run this scheme through the shared engine.
+
+        ``failure_model`` / ``topology`` select the failure regime (see
+        :mod:`repro.scenarios`); the default is the legacy single-victim
+        renewal stream."""
+        return run_scheme(self, p, seed=seed, t_c=t_c, max_wall=max_wall,
+                          failure_model=failure_model, topology=topology)
 
 
 def run_scheme(scheme: FaultToleranceScheme, p: DESParams, seed: int = 0,
                t_c: float | None = None,
-               max_wall: float | None = None) -> SimResult:
+               max_wall: float | None = None,
+               failure_model=None, topology=None) -> SimResult:
     """The one bulk-synchronous event loop every scheme runs on.
 
     Event order (and therefore RNG-draw order) is identical to the three
     original hand-rolled loops — the parity tests in
     ``tests/test_scheme_api.py`` assert bit-for-bit equality against the
     frozen copies in :mod:`repro.des._legacy`.
+
+    ``failure_model`` may inject multi-group simultaneous failures
+    (rack/pod bursts, trace replay): all victims of one event surface in
+    the same ``on_failure`` call, so wipe-out and stack accounting see
+    the full blast radius at once.
     """
-    sim = SimClock(p, seed)
+    sim = SimClock(p, seed, failure_model=failure_model, topology=topology)
     scheme.bind(p, sim, t_c=t_c)
     max_wall = max_wall if max_wall is not None else 500.0 * p.t0
 

@@ -1,0 +1,67 @@
+"""Scenario engine: cluster topology, failure models, campaign runner.
+
+The paper validates its claims under i.i.d. renewal failures with
+uniformly-random victims (Sec. 5), but production traces show failures
+that are spatially correlated (rack/pod co-failures), bursty, and
+time-varying. This package generalizes the single
+:class:`repro.des.failures.FailureProcess` stream into a pluggable
+:class:`FailureModel` protocol drawn over an explicit
+:class:`ClusterTopology` (groups -> hosts -> racks -> pods -> DCI
+domains), plus a declarative, process-parallel campaign runner that
+sweeps scheme x scale x failure-regime grids deterministically.
+
+Layers:
+
+* :mod:`repro.scenarios.topology` — the cluster layout model and the
+  100k-600k-GPU presets (paper Table 1 scale).
+* :mod:`repro.scenarios.models`  — the ``FailureModel`` protocol and the
+  built-in streams: ``weibull`` / ``poisson`` renewal baselines
+  (bit-for-bit compatible with the legacy ``FailureProcess``),
+  ``correlated`` rack/pod burst kills, ``diurnal`` rate modulation with
+  maintenance windows, ``trace`` JSONL replay (bundled synthetic traces
+  shaped like published cluster logs), and ``superposed`` mixtures.
+* :mod:`repro.scenarios.campaign` — scenario grids fanned out across a
+  ``ProcessPoolExecutor`` with deterministic per-cell seeding,
+  aggregated into byte-stable CSV/JSON artifacts
+  (CLI: ``python -m repro.launch.campaign``).
+"""
+from .topology import ClusterTopology, TOPOLOGY_PRESETS, topology_from_spec
+from .models import (
+    FailureModel,
+    RenewalModel,
+    PoissonModel,
+    CorrelatedModel,
+    DiurnalModel,
+    TraceReplayModel,
+    SuperposedModel,
+    get_failure_model,
+    list_failure_models,
+    register_failure_model,
+    model_from_spec,
+    bundled_traces,
+    load_trace,
+    sample_kill_batches,
+)
+from .campaign import (
+    CampaignSpec,
+    ScenarioCell,
+    CAMPAIGN_PRESETS,
+    cell_seed,
+    run_cell,
+    run_campaign,
+    parallel_map,
+    aggregate,
+    ranking_by_regime,
+    save_artifacts,
+)
+
+__all__ = [
+    "ClusterTopology", "TOPOLOGY_PRESETS", "topology_from_spec",
+    "FailureModel", "RenewalModel", "PoissonModel", "CorrelatedModel",
+    "DiurnalModel", "TraceReplayModel", "SuperposedModel",
+    "get_failure_model", "list_failure_models", "register_failure_model",
+    "model_from_spec", "bundled_traces", "load_trace", "sample_kill_batches",
+    "CampaignSpec", "ScenarioCell", "CAMPAIGN_PRESETS", "cell_seed",
+    "run_cell", "run_campaign", "parallel_map", "aggregate",
+    "ranking_by_regime", "save_artifacts",
+]

@@ -1,0 +1,368 @@
+"""Campaign runner: declarative scenario grids, process-parallel, deterministic.
+
+A *campaign* sweeps scheme x scale x redundancy x failure-regime x seed
+and aggregates every cell's :class:`repro.des.SimResult` into byte-stable
+CSV/JSON artifacts. It replaces the serial benchmark loops:
+
+* grids are declarative (:class:`CampaignSpec` or JSON files — see
+  ``python -m repro.launch.campaign``);
+* cells fan out across a ``ProcessPoolExecutor``; each cell derives its
+  RNG seed from a SHA-256 of its own key (:func:`cell_seed`), so a
+  4-worker run is byte-identical to a 1-worker run of the same grid;
+* wall-clock timings are reported separately (stderr / ``timing`` keys)
+  and never enter the deterministic artifacts.
+
+Cells are plain dicts (picklable, JSON-serializable); the worker entry
+point :func:`run_cell` is module-level so the pool can import it.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import hashlib
+import io
+import json
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from ..des import DESParams, get_scheme
+from ..des.engine import run_scheme
+from .models import model_from_spec
+from .topology import topology_from_spec
+
+__all__ = [
+    "ScenarioCell", "CampaignSpec", "CAMPAIGN_PRESETS",
+    "cell_seed", "run_cell", "run_campaign", "parallel_map",
+    "aggregate", "ranking_by_regime", "save_artifacts",
+]
+
+#: SimResult fields copied into each cell's result row (all deterministic)
+RESULT_FIELDS = ("wall", "committed", "t0", "steps_done", "node_failures",
+                 "wipeouts", "ckpt_count", "total_stacks", "patches",
+                 "mode_switches")
+DERIVED_FIELDS = ("ttt_norm", "availability", "avg_stacks")
+
+#: cells without per-scheme redundancy (the r grid does not apply)
+_R_FREE_SCHEMES = ("ckpt_only",)
+
+
+# ------------------------------------------------------------------ #
+# cells                                                              #
+# ------------------------------------------------------------------ #
+def _canon(obj) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def cell_key(cell: dict) -> str:
+    """Canonical identity of a cell: every field that affects its
+    simulation, in sorted-key JSON (stable across processes/platforms).
+    ``base_seed`` is excluded — it salts the seed hash separately, so a
+    raw ``spec.cells()`` dict and the same cell inside ``run_campaign``
+    hash identically."""
+    ident = {k: cell[k] for k in sorted(cell)
+             if k not in ("label", "base_seed")}
+    return _canon(ident)
+
+
+def cell_seed(cell: dict, base_seed: int = 0) -> int:
+    """Deterministic per-cell RNG seed: SHA-256 of the cell key, folded
+    with the grid's seed axis. Independent of worker count, execution
+    order, and ``PYTHONHASHSEED``."""
+    digest = hashlib.sha256(
+        f"{cell_key(cell)}|{base_seed}".encode()).digest()
+    return int.from_bytes(digest[:8], "little") & 0x7FFF_FFFF
+
+
+@dataclass
+class ScenarioCell:
+    """One point of the grid (kept as a dataclass for discoverability;
+    the pool ships the ``as_dict`` form)."""
+
+    scheme: str
+    n: int
+    model: dict
+    seed: int
+    steps: int
+    r: int | None = None
+    scheme_kwargs: dict = field(default_factory=dict)
+    mtbf: float | None = None
+    topology: object = None
+    t_c: float | None = None
+    max_wall: float | None = None
+
+    def as_dict(self) -> dict:
+        d = {"scheme": self.scheme, "n": self.n, "model": self.model,
+             "seed": self.seed, "steps": self.steps}
+        if self.r is not None:
+            d["r"] = self.r
+        if self.scheme_kwargs:
+            d["scheme_kwargs"] = dict(self.scheme_kwargs)
+        if self.mtbf is not None:
+            d["mtbf"] = self.mtbf
+        if self.topology is not None:
+            topo = self.topology
+            if dataclasses.is_dataclass(topo) and not isinstance(topo, type):
+                topo = dataclasses.asdict(topo)   # JSON/key-stable form
+            d["topology"] = topo
+        if self.t_c is not None:
+            d["t_c"] = self.t_c
+        if self.max_wall is not None:
+            d["max_wall"] = self.max_wall
+        return d
+
+
+@dataclass
+class CampaignSpec:
+    """Declarative grid: the cross product of every axis, with the ``r``
+    axis skipped for redundancy-free schemes (``ckpt_only``).
+
+    ``schemes`` entries are names or ``(name, kwargs)`` pairs; ``models``
+    entries are ``{"kind": ..., "label": ..., **kwargs}`` specs
+    (``label`` names the regime in artifacts and rankings).
+    """
+
+    name: str
+    schemes: list = field(default_factory=lambda: ["spare"])
+    ns: list[int] = field(default_factory=lambda: [200])
+    rs: list[int] = field(default_factory=lambda: [9])
+    models: list = field(default_factory=lambda: [{"kind": "weibull"}])
+    seeds: list[int] = field(default_factory=lambda: [0])
+    steps: int = 400
+    mtbf: float | None = None
+    topology: object = None
+    base_seed: int = 0
+
+    def cells(self) -> list[dict]:
+        out = []
+        for scheme in self.schemes:
+            if isinstance(scheme, (tuple, list)):
+                sname, skw = scheme[0], dict(scheme[1])
+            else:
+                sname, skw = scheme, {}
+            if "r" in skw:                  # pinned r beats the r axis
+                rs = [skw.pop("r")]
+            elif sname in _R_FREE_SCHEMES:
+                rs = [None]
+            else:
+                rs = self.rs
+            for n in self.ns:
+                for model in self.models:
+                    spec = model if isinstance(model, dict) \
+                        else {"kind": model}
+                    for r in rs:
+                        for seed in self.seeds:
+                            cell = ScenarioCell(
+                                scheme=sname, n=n, model=dict(spec),
+                                seed=seed, steps=self.steps, r=r,
+                                scheme_kwargs=skw, mtbf=self.mtbf,
+                                topology=self.topology).as_dict()
+                            cell["base_seed"] = self.base_seed
+                            out.append(cell)
+        return out
+
+    @classmethod
+    def from_json(cls, path: str | Path) -> "CampaignSpec":
+        data = json.loads(Path(path).read_text())
+        data.setdefault("name", Path(path).stem)
+        return cls(**data)
+
+
+# ------------------------------------------------------------------ #
+# execution                                                          #
+# ------------------------------------------------------------------ #
+def run_cell(cell: dict) -> dict:
+    """Worker entry point: simulate one cell, return a flat result dict.
+
+    The only nondeterministic key is ``elapsed_s`` (wall-clock), which
+    :func:`aggregate` strips from the artifacts.
+    """
+    params_kw = {"n": cell["n"], "steps": cell["steps"]}
+    if cell.get("mtbf") is not None:
+        params_kw["mtbf"] = cell["mtbf"]
+    p = DESParams(**params_kw)
+    topo = topology_from_spec(cell.get("topology"), n_groups=cell["n"]) \
+        if cell.get("topology") is not None else None
+    model = model_from_spec(cell["model"])
+    skw = dict(cell.get("scheme_kwargs") or {})
+    if cell.get("r") is not None:
+        skw.setdefault("r", cell["r"])
+    scheme = get_scheme(cell["scheme"], **skw)
+
+    seed = cell_seed(cell, base_seed=cell.get("base_seed", 0))
+    t0 = time.perf_counter()
+    res = run_scheme(scheme, p, seed=seed, t_c=cell.get("t_c"),
+                     max_wall=cell.get("max_wall"),
+                     failure_model=model, topology=topo)
+    elapsed = time.perf_counter() - t0
+
+    row = {
+        "key": cell_key(cell),
+        "scheme": cell["scheme"],
+        "n": cell["n"],
+        "r": cell.get("r"),
+        "model": cell["model"].get("label", cell["model"]["kind"]),
+        "seed": cell["seed"],
+        "cell_seed": seed,
+    }
+    for f in RESULT_FIELDS:
+        row[f] = getattr(res, f)
+    for f in DERIVED_FIELDS:
+        row[f] = getattr(res, f)
+    row["elapsed_s"] = elapsed
+    return row
+
+
+def run_campaign(cells: list[dict], jobs: int = 1,
+                 base_seed: int | None = None) -> list[dict]:
+    """Run every cell, serially (``jobs <= 1``) or across a process
+    pool. Results are ordered by cell key, so the output is independent
+    of worker count and completion order. ``base_seed`` overrides each
+    cell's own salt when given; ``None`` keeps what the grid set."""
+    if base_seed is not None:
+        cells = [dict(c, base_seed=base_seed) for c in cells]
+    if jobs <= 1:
+        results = [run_cell(c) for c in cells]
+    else:
+        with ProcessPoolExecutor(max_workers=jobs) as ex:
+            results = list(ex.map(run_cell, cells, chunksize=1))
+    results.sort(key=lambda r: r["key"])
+    return results
+
+
+def parallel_map(fn, argtuples: list[tuple], jobs: int = 1) -> list:
+    """Order-preserving (possibly process-parallel) starmap for
+    non-campaign workloads — e.g. the Monte-Carlo benchmark cells."""
+    if jobs <= 1:
+        return [fn(*args) for args in argtuples]
+    with ProcessPoolExecutor(max_workers=jobs) as ex:
+        futs = [ex.submit(fn, *args) for args in argtuples]
+        return [f.result() for f in futs]
+
+
+# ------------------------------------------------------------------ #
+# aggregation / artifacts                                            #
+# ------------------------------------------------------------------ #
+_CSV_COLUMNS = ("scheme", "n", "r", "model", "seed", "cell_seed",
+                *RESULT_FIELDS, *DERIVED_FIELDS)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return repr(v)              # full precision, deterministic
+    if v is None:
+        return ""
+    return str(v)
+
+
+def aggregate(results: list[dict]) -> tuple[str, dict]:
+    """Deterministic artifacts: ``(csv_text, json_obj)``. Timings are
+    excluded — identical grids give identical bytes at any ``--jobs``."""
+    buf = io.StringIO()
+    w = csv.writer(buf, lineterminator="\n")
+    w.writerow(_CSV_COLUMNS)
+    for row in results:
+        w.writerow([_fmt(row[c]) for c in _CSV_COLUMNS])
+    clean = [{k: v for k, v in row.items() if k != "elapsed_s"}
+             for row in results]
+    obj = {
+        "cells": clean,
+        "ranking": ranking_by_regime(results),
+    }
+    return buf.getvalue(), obj
+
+
+def ranking_by_regime(results: list[dict]) -> dict:
+    """Per ``(n, model)`` regime: schemes ranked by mean normalized
+    time-to-train over seeds (and r points) — the regime-dependent
+    policy ordering the adaptive scheme must track."""
+    groups: dict[tuple, dict[str, list[float]]] = {}
+    for row in results:
+        regime = (row["n"], row["model"])
+        groups.setdefault(regime, {}).setdefault(
+            row["scheme"], []).append(row["ttt_norm"])
+    out = {}
+    for (n, model), by_scheme in sorted(groups.items()):
+        scored = sorted(
+            ((sum(v) / len(v), s) for s, v in by_scheme.items()))
+        out[f"n={n}/{model}"] = [
+            {"scheme": s, "mean_ttt_norm": score} for score, s in scored]
+    return out
+
+
+def save_artifacts(name: str, results: list[dict],
+                   outdir: str | Path | None = None) -> tuple[Path, Path]:
+    """Write ``<name>.csv`` + ``<name>.json`` under ``outdir`` (default:
+    ``benchmarks/results/``). Returns the two paths."""
+    if outdir is None:
+        outdir = Path(__file__).resolve().parents[3] \
+            / "benchmarks" / "results"
+    outdir = Path(outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    csv_text, obj = aggregate(results)
+    csv_path = outdir / f"{name}.csv"
+    json_path = outdir / f"{name}.json"
+    csv_path.write_text(csv_text)
+    json_path.write_text(_canon(obj) + "\n")
+    return csv_path, json_path
+
+
+# ------------------------------------------------------------------ #
+# presets                                                            #
+# ------------------------------------------------------------------ #
+#: three failure regimes of the acceptance sweep: a quiet memoryless
+#: cluster, a bursty Weibull storm, and spatially-correlated rack kills
+REGIME_MODELS = [
+    {"kind": "poisson", "label": "quiet_poisson", "mtbf": 30_000.0},
+    {"kind": "weibull", "label": "bursty_weibull", "shape": 0.55,
+     "mtbf": 300.0},
+    {"kind": "correlated", "label": "rack_kill", "scope": "rack",
+     "burst_prob": 0.25, "mtbf": 600.0},
+]
+
+CAMPAIGN_PRESETS: dict[str, CampaignSpec] = {
+    # 2x2 CI smoke: two schemes x two regimes
+    "smoke": CampaignSpec(
+        name="campaign_smoke",
+        schemes=["spare", "replication"],
+        ns=[200], rs=[4],
+        models=[{"kind": "weibull", "label": "weibull"},
+                {"kind": "correlated", "label": "rack_kill",
+                 "burst_prob": 0.25}],
+        seeds=[0], steps=250,
+    ),
+    # balanced 16-cell grid for the parallel-speedup check
+    "quick": CampaignSpec(
+        name="campaign_quick",
+        schemes=["spare", "replication"],
+        ns=[200], rs=[4, 9],
+        models=[{"kind": "weibull", "label": "weibull"},
+                {"kind": "correlated", "label": "rack_kill",
+                 "burst_prob": 0.25}],
+        seeds=[0, 1], steps=600,
+    ),
+    # the adaptive acceptance sweep: every scheme across three regimes
+    "regimes": CampaignSpec(
+        name="campaign_regimes",
+        schemes=["ckpt_only", ("replication", {"r": 2}), "spare",
+                 "adaptive"],
+        ns=[200], rs=[9],
+        models=REGIME_MODELS,
+        seeds=[0, 1, 2], steps=600,
+    ),
+    # paper-scale sweep (hours on CPU): Table-1 N points, full horizons
+    "paper": CampaignSpec(
+        name="campaign_paper",
+        schemes=["ckpt_only", ("replication", {"r": 2}), "spare",
+                 "adaptive"],
+        ns=[200, 600, 1000], rs=[4, 9, 12],
+        models=REGIME_MODELS + [
+            {"kind": "trace", "label": "meta_hsdp_rackstorm",
+             "trace": "meta_hsdp_rackstorm"},
+            {"kind": "diurnal", "label": "diurnal_maintenance",
+             "maintenance_start": 10_800.0},
+        ],
+        seeds=[0, 1, 2], steps=10_000,
+    ),
+}

@@ -1,0 +1,175 @@
+"""Campaign runner: grids, deterministic seeding, parallel execution.
+
+Acceptance points: a process-parallel run is byte-identical to a serial
+run of the same grid, and the adaptive scheme's ranking is
+regime-dependent across quiet / bursty / correlated failure models.
+"""
+import json
+
+import pytest
+
+from repro.scenarios import (
+    CAMPAIGN_PRESETS,
+    CampaignSpec,
+    aggregate,
+    cell_seed,
+    ranking_by_regime,
+    run_campaign,
+    run_cell,
+    save_artifacts,
+)
+
+SMOKE = CampaignSpec(
+    name="test_smoke",
+    schemes=["spare", "replication"],
+    ns=[200], rs=[4],
+    models=[{"kind": "weibull", "label": "weibull"},
+            {"kind": "correlated", "label": "rack", "burst_prob": 0.3}],
+    seeds=[0], steps=120,
+)
+
+
+def test_grid_expansion_shapes():
+    cells = SMOKE.cells()
+    assert len(cells) == 4                       # 2 schemes x 2 models
+    assert {c["scheme"] for c in cells} == {"spare", "replication"}
+    assert all(c["steps"] == 120 for c in cells)
+
+
+def test_grid_skips_r_axis_for_ckpt_only_and_pins_explicit_r():
+    spec = CampaignSpec(name="x", schemes=["ckpt_only",
+                                           ("replication", {"r": 2}),
+                                           "spare"],
+                        ns=[200], rs=[4, 9], seeds=[0])
+    cells = spec.cells()
+    by_scheme = {}
+    for c in cells:
+        by_scheme.setdefault(c["scheme"], []).append(c.get("r"))
+    assert by_scheme["ckpt_only"] == [None]      # no r sweep
+    assert by_scheme["replication"] == [2]       # pinned, not [4, 9]
+    assert sorted(by_scheme["spare"]) == [4, 9]
+
+
+def test_cell_seed_is_stable_and_distinct():
+    cells = SMOKE.cells()
+    seeds = [cell_seed(c) for c in cells]
+    assert seeds == [cell_seed(c) for c in cells]          # stable
+    assert len(set(seeds)) == len(seeds)                   # distinct
+    assert cell_seed(cells[0], base_seed=1) != seeds[0]    # base folds in
+
+
+def test_run_cell_returns_deterministic_row():
+    cell = SMOKE.cells()[0]
+    a = run_cell(dict(cell))
+    b = run_cell(dict(cell))
+    assert a["wall"] == b["wall"]
+    assert a["ttt_norm"] == b["ttt_norm"]
+    assert a["scheme"] == "spare" and a["model"] == "weibull"
+
+
+def test_base_seed_flows_from_spec_and_raw_cell_matches_campaign():
+    """Regression: a grid's base_seed must reach the per-cell hash, and
+    run_cell on a raw spec cell must equal the same cell inside
+    run_campaign (base_seed is excluded from the key, folded into the
+    seed salt only)."""
+    kw = dict(name="s", schemes=["spare"], ns=[200], rs=[4],
+              models=[{"kind": "weibull"}], seeds=[0], steps=80)
+    r0 = run_campaign(CampaignSpec(**kw).cells(), jobs=1)[0]
+    r7 = run_campaign(CampaignSpec(**kw, base_seed=7).cells(), jobs=1)[0]
+    assert r0["wall"] != r7["wall"]
+    assert r0["key"] == r7["key"]               # same cell, other replica
+    raw = run_cell(CampaignSpec(**kw).cells()[0])
+    assert raw["wall"] == r0["wall"] and raw["key"] == r0["key"]
+
+
+def test_campaign_smoke_2x2_grid():
+    results = run_campaign(SMOKE.cells(), jobs=1)
+    assert len(results) == 4
+    csv_text, obj = aggregate(results)
+    assert csv_text.count("\n") == 5             # header + 4 rows
+    assert set(obj["ranking"]) == {"n=200/weibull", "n=200/rack"}
+
+
+def test_parallel_equals_serial_byte_identical():
+    """The acceptance determinism bar: worker count must not leak into
+    the aggregated artifacts."""
+    serial = run_campaign(SMOKE.cells(), jobs=1)
+    parallel = run_campaign(SMOKE.cells(), jobs=2)
+    csv_s, obj_s = aggregate(serial)
+    csv_p, obj_p = aggregate(parallel)
+    assert csv_s == csv_p
+    assert json.dumps(obj_s, sort_keys=True) == \
+        json.dumps(obj_p, sort_keys=True)
+
+
+def test_save_artifacts_roundtrip(tmp_path):
+    results = run_campaign(SMOKE.cells()[:2], jobs=1)
+    csv_path, json_path = save_artifacts("t", results, outdir=tmp_path)
+    assert csv_path.read_text().startswith("scheme,")
+    obj = json.loads(json_path.read_text())
+    assert len(obj["cells"]) == 2
+    assert all("elapsed_s" not in c for c in obj["cells"])
+
+
+def test_spec_from_json_roundtrip(tmp_path):
+    path = tmp_path / "grid.json"
+    path.write_text(json.dumps({
+        "schemes": ["spare"], "ns": [200], "rs": [4],
+        "models": [{"kind": "poisson"}], "seeds": [0], "steps": 50}))
+    spec = CampaignSpec.from_json(path)
+    assert spec.name == "grid"
+    assert len(spec.cells()) == 1
+    row = run_cell(dict(spec.cells()[0], base_seed=0))
+    assert row["steps_done"] == 50
+
+
+def test_presets_expand():
+    for name, spec in CAMPAIGN_PRESETS.items():
+        cells = spec.cells()
+        assert cells, name
+        if name == "smoke":
+            assert len(cells) == 4
+        if name == "quick":
+            assert len(cells) >= 8               # speedup grid
+
+
+def test_adaptive_regime_dependent_ranking():
+    """ISSUE-2 acceptance: across quiet Poisson / bursty Weibull /
+    correlated rack-kill regimes the fixed-scheme ranking flips, and
+    adaptive tracks the per-regime winner."""
+    spec = CampaignSpec(
+        name="regimes_mini",
+        schemes=["ckpt_only", ("replication", {"r": 2}), "spare",
+                 "adaptive"],
+        ns=[200], rs=[9],
+        models=[
+            {"kind": "poisson", "label": "quiet", "mtbf": 50_000.0},
+            {"kind": "weibull", "label": "bursty", "shape": 0.55,
+             "mtbf": 300.0},
+            {"kind": "correlated", "label": "rack_kill",
+             "burst_prob": 0.25, "mtbf": 600.0},
+        ],
+        seeds=[0], steps=250,
+    )
+    results = run_campaign(spec.cells(), jobs=1)
+    ranking = ranking_by_regime(results)
+    order = {regime.split("/")[1]: [e["scheme"] for e in entries]
+             for regime, entries in ranking.items()}
+    mean = {regime.split("/")[1]:
+            {e["scheme"]: e["mean_ttt_norm"] for e in entries}
+            for regime, entries in ranking.items()}
+
+    # quiet: 1-stack policies win; replication's 2x compute loses
+    assert order["quiet"][-1] == "replication"
+    assert mean["quiet"]["ckpt_only"] < 1.2
+    # storms: ckpt_only collapses (restart-dominant), spare wins
+    for regime in ("bursty", "rack_kill"):
+        assert order[regime][0] in ("spare", "adaptive")
+        assert order[regime][-1] == "ckpt_only"
+        assert mean[regime]["ckpt_only"] > 2 * mean[regime]["spare"]
+    # the ranking actually flips with the regime
+    assert order["quiet"] != order["rack_kill"]
+    # adaptive tracks the winner everywhere (within 25%)
+    for regime, by_scheme in mean.items():
+        best_fixed = min(v for s, v in by_scheme.items() if s != "adaptive")
+        assert by_scheme["adaptive"] <= best_fixed * 1.25, regime

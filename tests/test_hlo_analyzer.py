@@ -36,9 +36,13 @@ def test_nested_scan_flops_exact():
     assert c.flops == pytest.approx(3 * 4 * 2 * 16 * 128 * 128, rel=0.02)
 
 
+@pytest.mark.tpu
 def test_xla_cost_analysis_undercounts_loops():
     """The reason this module exists: XLA's own cost analysis visits while
-    bodies once. Keep this regression so nobody 'simplifies' back."""
+    bodies once. Keep this regression so nobody 'simplifies' back.
+    (``tpu``-marked: the CPU backend's cost analysis reports different
+    per-op counts, so the undercount assertion only holds as lowered for
+    the TPU toolchain.)"""
     W = jnp.zeros((8, 256, 256), jnp.float32)
     x = jnp.zeros((32, 256), jnp.float32)
 

@@ -1,0 +1,349 @@
+"""Scenario engine: topology, failure models, engine integration.
+
+Covers the ISSUE-2 acceptance points: seed-determinism of every
+``FailureModel``, bit-for-bit Poisson/Weibull parity with the legacy
+``FailureProcess`` stream, blast-radius victim selection, and
+multi-group simultaneous failures reaching the schemes.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.montecarlo import run_montecarlo, run_trial
+from repro.des import DESParams, get_scheme
+from repro.des.failures import FailureProcess
+from repro.scenarios import (
+    ClusterTopology,
+    CorrelatedModel,
+    RenewalModel,
+    bundled_traces,
+    get_failure_model,
+    list_failure_models,
+    load_trace,
+    model_from_spec,
+    sample_kill_batches,
+    topology_from_spec,
+)
+
+
+# ------------------------------------------------------------------ #
+# topology                                                            #
+# ------------------------------------------------------------------ #
+def test_topology_hierarchy_sizes():
+    topo = ClusterTopology(n_groups=64, hosts_per_group=2, hosts_per_rack=8,
+                           racks_per_pod=4, pods_per_dci=2)
+    assert topo.n_hosts == 128
+    assert topo.n_racks == 16
+    assert topo.n_pods == 4
+    assert topo.n_dcis == 2
+    assert topo.total_gpus == 128 * 8
+
+
+def test_topology_blast_radius_nested():
+    topo = ClusterTopology(n_groups=64, hosts_per_group=1, hosts_per_rack=4,
+                           racks_per_pod=4, pods_per_dci=2)
+    g = 5
+    rack = topo.blast_radius(g, "rack")
+    pod = topo.blast_radius(g, "pod")
+    dci = topo.blast_radius(g, "dci")
+    assert topo.blast_radius(g, "group") == [g]
+    assert g in rack and set(rack) <= set(pod) <= set(dci)
+    assert len(rack) == 4 and len(pod) == 16 and len(dci) == 32
+
+
+def test_topology_resolve_maps_locations_to_groups():
+    topo = ClusterTopology(n_groups=16, hosts_per_group=2, hosts_per_rack=4)
+    # host 5 belongs to group 2 (hosts 4,5)
+    assert topo.resolve("host", 5) == [2]
+    # rack 0 = hosts 0..3 = groups 0,1
+    assert topo.resolve("rack", 0) == [0, 1]
+    # locations wrap modulo the domain count (trace portability)
+    assert topo.resolve("rack", topo.n_racks) == topo.resolve("rack", 0)
+    with pytest.raises(ValueError):
+        topo.resolve("continent", 0)
+
+
+def test_topology_paper_scale_presets():
+    topo = topology_from_spec("600k")
+    assert topo.n_groups == 600
+    assert topo.total_gpus == pytest.approx(600_000, rel=0.01)
+    # Table 1: 1000 GPUs per group => 125 hosts per group at 8 GPUs/host
+    assert topo.hosts_per_group == 125
+    small = topology_from_spec(None, n_groups=32)
+    assert small.n_groups == 32
+    with pytest.raises(KeyError):
+        topology_from_spec("3m")
+
+
+def test_topology_group_spanning_racks():
+    # a group wider than one rack blasts every rack it touches
+    topo = ClusterTopology(n_groups=8, hosts_per_group=8, hosts_per_rack=4)
+    assert list(topo.racks_of_group(0)) == [0, 1]
+    assert set(topo.blast_radius(0, "rack")) == {0}
+    # rack 1 holds hosts 4..7, all of group 0
+    assert topo.groups_in_rack(1) == [0]
+
+
+# ------------------------------------------------------------------ #
+# model registry                                                      #
+# ------------------------------------------------------------------ #
+def test_model_registry_lists_builtins():
+    names = list_failure_models()
+    for k in ("weibull", "poisson", "correlated", "diurnal", "trace",
+              "superposed"):
+        assert k in names
+    with pytest.raises(KeyError, match="correlated"):
+        get_failure_model("nope")
+
+
+def test_model_from_spec_forms():
+    assert model_from_spec(None).name == "weibull"
+    assert model_from_spec("poisson").name == "poisson"
+    m = model_from_spec({"kind": "correlated", "label": "x",
+                         "burst_prob": 0.3})
+    assert m.name == "correlated" and m.scope_probs == {"rack": 0.3}
+
+
+# ------------------------------------------------------------------ #
+# seed determinism of every model                                     #
+# ------------------------------------------------------------------ #
+ALL_MODEL_SPECS = [
+    {"kind": "weibull"},
+    {"kind": "poisson"},
+    {"kind": "correlated", "burst_prob": 0.4},
+    {"kind": "diurnal", "period": 2000.0, "amplitude": 0.8,
+     "maintenance_start": 100.0, "maintenance_len": 400.0},
+    {"kind": "trace", "trace": "meta_hsdp_rackstorm", "time_scale": 0.05},
+    {"kind": "superposed", "components": [
+        {"kind": "poisson", "mtbf": 500.0},
+        {"kind": "correlated", "scope": "pod", "burst_prob": 1.0,
+         "mtbf": 2000.0}]},
+]
+
+
+def _event_stream(spec, seed, n=40, events=25):
+    """Drain (time, victims) tuples from a freshly-bound model."""
+    p = DESParams(n=n, mtbf=300.0)
+    model = model_from_spec(spec)
+    rng = np.random.default_rng(seed)
+    model.bind(p, rng, ClusterTopology(n_groups=n))
+    dead: set[int] = set()
+    out = []
+    t = model.next_arrival(0.0, n, n)
+    while len(out) < events and len(dead) < n and t != math.inf:
+        victims = [v for v in model.draw_victims(t, dead) if v not in dead]
+        dead.update(victims)
+        out.append((t, tuple(victims)))
+        t = model.next_arrival(t, max(n - len(dead), 1), n)
+    return out
+
+
+@pytest.mark.parametrize("spec", ALL_MODEL_SPECS,
+                         ids=lambda s: s["kind"])
+def test_model_event_stream_deterministic_by_seed(spec):
+    a = _event_stream(spec, seed=7)
+    b = _event_stream(spec, seed=7)
+    c = _event_stream(spec, seed=8)
+    assert a == b
+    assert len(a) > 0
+    if spec["kind"] != "trace":        # trace times are seed-independent
+        assert a != c
+
+
+@pytest.mark.parametrize("spec", ALL_MODEL_SPECS,
+                         ids=lambda s: s["kind"])
+def test_model_rebind_resets_state(spec):
+    """bind() must fully reset: the same instance drained twice gives
+    the same stream (campaign cells reuse model objects)."""
+    model = model_from_spec(spec)
+    p = DESParams(n=40, mtbf=300.0)
+
+    def drain():
+        rng = np.random.default_rng(3)
+        model.bind(p, rng, ClusterTopology(n_groups=40))
+        dead: set[int] = set()
+        out = []
+        t = model.next_arrival(0.0, 40, 40)
+        for _ in range(15):
+            if t == math.inf or len(dead) >= 40:
+                break
+            v = [x for x in model.draw_victims(t, dead) if x not in dead]
+            dead.update(v)
+            out.append((t, tuple(v)))
+            t = model.next_arrival(t, max(40 - len(dead), 1), 40)
+        return out
+
+    assert drain() == drain()
+
+
+# ------------------------------------------------------------------ #
+# legacy parity                                                       #
+# ------------------------------------------------------------------ #
+def test_renewal_model_bitwise_parity_with_failure_process():
+    """The weibull RenewalModel must draw the exact legacy sequence:
+    one interval draw per event, one uniform victim choice."""
+    p = DESParams(n=50)
+    m = RenewalModel()
+    rng_model = np.random.default_rng(11)
+    rng_ref = np.random.default_rng(11)
+    m.bind(p, rng_model)
+    proc = FailureProcess(p.mtbf, p.weibull_shape, rng_ref,
+                          law=p.failure_law,
+                          scale_with_survivors=p.scale_rate_with_survivors)
+    dead: set[int] = set()
+    t_m = m.next_arrival(0.0, 50, 50)
+    t_r = proc.next_arrival(0.0, 50, 50)
+    for _ in range(30):
+        assert t_m == t_r
+        victims = m.draw_victims(t_m, dead)
+        cands = [w for w in range(50) if w not in dead]
+        assert victims == [int(rng_ref.choice(cands))]
+        dead.update(victims)
+        alive = 50 - len(dead)
+        t_m = m.next_arrival(t_m, alive, 50)
+        t_r = proc.next_arrival(t_r, alive, 50)
+
+
+@pytest.mark.parametrize("law,kind", [("weibull", "weibull"),
+                                      ("exponential", "poisson")])
+def test_engine_default_equals_explicit_renewal_model(law, kind):
+    """Poisson/Weibull parity at the engine level: injecting the model
+    explicitly reproduces the default stream bit-for-bit."""
+    p = DESParams(n=200, steps=150, failure_law=law)
+    a = get_scheme("spare", r=9).simulate(p, seed=3)
+    b = get_scheme("spare", r=9).simulate(p, seed=3,
+                                          failure_model=model_from_spec(kind))
+    for f in ("wall", "committed", "steps_done", "node_failures",
+              "wipeouts", "ckpt_count", "total_stacks", "patches"):
+        assert getattr(a, f) == getattr(b, f), f
+
+
+# ------------------------------------------------------------------ #
+# engine integration: correlated + multi-group failures               #
+# ------------------------------------------------------------------ #
+def test_correlated_bursts_reach_scheme_as_simultaneous_failures():
+    """A guaranteed-burst model must surface multi-group failure sets in
+    one on_failure call (blast-radius wipe-out accounting)."""
+    seen: list[int] = []
+    base = get_scheme("spare", r=4)
+    orig = base.on_failure
+
+    def spy(sim, failed, work):
+        seen.append(len(failed))
+        return orig(sim, failed, work)
+
+    base.on_failure = spy
+    topo = ClusterTopology(n_groups=200, hosts_per_rack=8)
+    model = CorrelatedModel(burst_prob=1.0, scope="rack")
+    p = DESParams(n=200, steps=120)
+    res = base.simulate(p, seed=0, failure_model=model, topology=topo)
+    assert res.node_failures > 0
+    assert max(seen, default=0) > 1, "rack bursts must batch failures"
+
+
+def test_correlated_regime_degrades_spare_vs_renewal():
+    """Spatial correlation at equal system MTBF must not *improve* SPARe:
+    burst kills concentrate failures inside one checkpoint interval."""
+    p = DESParams(n=200, steps=250)
+    topo = ClusterTopology(n_groups=200)
+    quiet = get_scheme("spare", r=9).simulate(
+        p, seed=5, failure_model=model_from_spec({"kind": "weibull"}))
+    burst = get_scheme("spare", r=9).simulate(
+        p, seed=5, failure_model=model_from_spec(
+            {"kind": "correlated", "burst_prob": 0.5}),
+        topology=topo)
+    assert burst.ttt_norm >= quiet.ttt_norm * 0.95
+
+
+def test_trace_replay_drives_engine():
+    p = DESParams(n=200, steps=100)
+    model = model_from_spec({"kind": "trace", "trace": "quiet_poisson",
+                             "time_scale": 0.2})
+    res = get_scheme("spare", r=9).simulate(p, seed=0, failure_model=model)
+    assert res.steps_done == 100
+    assert res.node_failures > 0
+
+
+def test_trace_loader_and_bundled_traces():
+    names = bundled_traces()
+    assert {"meta_hsdp_rackstorm", "quiet_poisson",
+            "diurnal_maintenance"} <= set(names)
+    ev = load_trace("meta_hsdp_rackstorm")
+    assert len(ev) > 100
+    assert all(e["t"] >= p["t"] for p, e in zip(ev, ev[1:]))
+    scopes = {e["scope"] for e in ev}
+    assert "rack" in scopes and "host" in scopes
+    with pytest.raises(FileNotFoundError):
+        load_trace("no_such_trace")
+
+
+def test_diurnal_rate_factor_modulates():
+    m = model_from_spec({"kind": "diurnal", "period": 1000.0,
+                         "amplitude": 0.5, "peak": 0.5,
+                         "maintenance_start": 0.0,
+                         "maintenance_len": 100.0,
+                         "maintenance_factor": 4.0})
+    m.bind(DESParams(n=20), np.random.default_rng(0))
+    assert m.rate_factor(500.0) == pytest.approx(1.5)   # peak
+    off_peak = 1.0 + 0.5 * math.cos(2 * math.pi * (50.0 / 1000.0 - 0.5))
+    assert m.rate_factor(50.0) == pytest.approx(off_peak * 4.0)
+    assert m.rate_factor(150.0) < m.rate_factor(50.0)   # window ended
+    # higher rate => stochastically earlier arrivals at the peak
+    quiet = _event_stream({"kind": "poisson"}, seed=1)
+    assert len(quiet) > 0
+
+
+# ------------------------------------------------------------------ #
+# Monte-Carlo integration                                             #
+# ------------------------------------------------------------------ #
+def test_sample_kill_batches_covers_all_groups():
+    batches = sample_kill_batches({"kind": "correlated", "burst_prob": 0.5},
+                                  40, np.random.default_rng(2),
+                                  topology=ClusterTopology(n_groups=40))
+    flat = [w for b in batches for w in b]
+    assert sorted(flat) == list(range(40))      # each group exactly once
+    assert max(len(b) for b in batches) > 1     # with bursts
+
+
+def test_run_trial_accepts_batches_and_flags_censoring():
+    rng = np.random.default_rng(0)
+    f, depths = run_trial(30, 4, rng)
+    assert f is not None and 1 <= f <= 30
+    assert len(depths) == f - 1
+    # multi-kill batches: depths recorded per event, not per failure
+    rng = np.random.default_rng(0)
+    batches = [[0, 1], [2, 3], [4]]
+    f2, depths2 = run_trial(30, 4, rng, kill_batches=batches)
+    if f2 is None:
+        assert len(depths2) == len(batches)
+
+
+def test_montecarlo_blast_radius_lowers_failure_tolerance():
+    base = run_montecarlo(200, 9, trials=25, seed=1)
+    corr = run_montecarlo(
+        200, 9, trials=25, seed=1,
+        failure_model={"kind": "correlated", "burst_prob": 0.5},
+        topology=ClusterTopology(n_groups=200))
+    assert corr.mean_failures < base.mean_failures
+    assert base.censored == 0 and corr.censored == 0
+
+
+def test_montecarlo_terminates_on_partial_coverage_trace():
+    """Regression: a looping trace whose locations never cover all N
+    groups must not spin forever in sample_kill_batches — the uniform
+    fallback finishes the kill order."""
+    res = run_montecarlo(
+        200, 9, trials=2, seed=0,
+        failure_model={"kind": "trace", "trace": "quiet_poisson"})
+    assert res.censored == 0
+    assert res.mean_failures == res.mean_failures   # not NaN
+
+
+def test_montecarlo_deterministic_with_model():
+    kw = dict(trials=10, seed=9,
+              failure_model={"kind": "correlated", "burst_prob": 0.3})
+    a = run_montecarlo(100, 6, **kw)
+    b = run_montecarlo(100, 6, **kw)
+    assert a.failures == b.failures
+    assert a.stacks_per_k == b.stacks_per_k
