@@ -1,3 +1,5 @@
-from .checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+from .checkpoint import (CheckpointManager, restore_checkpoint,
+                         save_checkpoint, sweep_stale_tmp)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "sweep_stale_tmp"]

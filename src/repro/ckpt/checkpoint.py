@@ -19,6 +19,7 @@ exactly the paper's SPARe+CKPT.
 from __future__ import annotations
 
 import json
+import shutil
 import threading
 import time
 from pathlib import Path
@@ -29,7 +30,53 @@ import numpy as np
 
 from repro.core.theory import mu, tc_star
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointManager"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "sweep_stale_tmp",
+           "CheckpointManager"]
+
+
+def _tmp_dir(directory: Path, step: int) -> Path:
+    """Staging directory for one save. Dot-prefixed so a crash leftover
+    can never match the ``step_*`` glob that ``restore_checkpoint`` and
+    ``CheckpointManager._gc`` scan (a leftover ``step_00000100.tmp``
+    used to make ``int("00000100.tmp")`` raise on every later restore)."""
+    return directory / f".tmp_step_{step:08d}"
+
+
+def sweep_stale_tmp(directory: str | Path) -> list[Path]:
+    """Clean up crash leftovers from interrupted saves.
+
+    ``.tmp_step_*`` staging dirs and the legacy ``step_*.tmp`` form are
+    removed (a crash may have left them half-written). A ``.old_step_*``
+    dir is a *complete* checkpoint parked by the overwrite-safe commit:
+    if the crash hit between parking the old copy and committing the new
+    one, the committed name is missing — rename the parked copy back
+    (the promised "crash leaves the previous checkpoint intact") instead
+    of deleting the only good copy. Returns the paths removed.
+    """
+    d = Path(directory)
+    stale = [p for p in d.glob(".tmp_step_*") if p.is_dir()]
+    stale += [p for p in d.glob("step_*.tmp") if p.is_dir()]
+    stale += _recover_parked(d)
+    for p in stale:
+        shutil.rmtree(p, ignore_errors=True)
+    return stale
+
+
+def _recover_parked(d: Path) -> list[Path]:
+    """Heal the overwrite-commit crash window: a ``.old_step_*`` dir is
+    a complete checkpoint parked before the new copy committed. If the
+    committed name is missing, rename the park back; otherwise return it
+    as junk for the caller to delete."""
+    junk = []
+    for p in d.glob(".old_step_*"):
+        if not p.is_dir():
+            continue
+        committed = d / p.name[len(".old_"):]
+        if committed.exists():
+            junk.append(p)              # commit finished; park is junk
+        else:
+            p.rename(committed)         # recover the previous checkpoint
+    return junk
 
 
 def _flatten_with_names(tree: Any) -> list[tuple[str, np.ndarray]]:
@@ -50,8 +97,10 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
     uint16 bit-view with the true dtype recorded in the manifest.
     """
     d = Path(directory) / f"step_{step:08d}"
-    tmp = d.with_suffix(".tmp")
-    tmp.mkdir(parents=True, exist_ok=True)
+    tmp = _tmp_dir(Path(directory), step)
+    if tmp.exists():                    # leftover of an interrupted save
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
     flat = _flatten_with_names(tree)
     names = [n for n, _ in flat]
     dtypes = []
@@ -71,7 +120,22 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
         "format": "npz-v1",
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest))
-    tmp.rename(d)                       # atomic commit
+    # overwrite-safe commit: re-saving a step after a rollback replaces
+    # the old directory (plain rename onto a non-empty dir raises). The
+    # old copy is parked under a dot-prefixed name first so the commit
+    # point stays a single rename; a crash inside the park->commit
+    # window is healed by sweep_stale_tmp, which renames the parked
+    # complete copy back — either the old or the new checkpoint
+    # survives, never a half-written one.
+    if d.exists():
+        old = d.with_name(f".old_{d.name}")
+        if old.exists():
+            shutil.rmtree(old)
+        d.rename(old)
+        tmp.rename(d)                   # atomic commit
+        shutil.rmtree(old)
+    else:
+        tmp.rename(d)                   # atomic commit
     return d
 
 
@@ -82,12 +146,26 @@ def restore_checkpoint(directory: str | Path, tree_like: Any,
     full-size (universal-checkpoint style) and resharded on load by
     device_put with the caller's shardings."""
     d = Path(directory)
-    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*")
-                   if p.is_dir())
-    if not steps:
+    # only committed checkpoints parse: staging dirs are dot-prefixed
+    # now, but leftovers from older versions (``step_<n>.tmp``) must not
+    # break the scan either
+    by_step = {int(p.name.split("_")[1]): p for p in d.glob("step_*")
+               if p.is_dir() and p.name.split("_")[1].isdigit()}
+    # a save that crashed inside the overwrite-commit window leaves the
+    # previous (complete) checkpoint parked under ``.old_step_*``; read
+    # it in place — renaming here could race a concurrent in-flight
+    # async save's own commit (sweep_stale_tmp heals the name on the
+    # next CheckpointManager init)
+    for p in d.glob(".old_step_*"):
+        s = p.name.rsplit("_", 1)[1]
+        if p.is_dir() and s.isdigit() and int(s) not in by_step:
+            by_step[int(s)] = p
+    if not by_step:
         raise FileNotFoundError(f"no checkpoints under {d}")
-    step = step if step is not None else steps[-1]
-    cdir = d / f"step_{step:08d}"
+    step = step if step is not None else max(by_step)
+    if step not in by_step:
+        raise FileNotFoundError(f"no checkpoint for step {step} under {d}")
+    cdir = by_step[step]
     data = np.load(cdir / "shard_0.npz")
     manifest = json.loads((cdir / "manifest.json").read_text())
     names = manifest["leaves"]
@@ -112,6 +190,8 @@ class CheckpointManager:
                  redundancy: int, mtbf: float, t_save: float,
                  t_restart: float, keep: int = 3):
         self.directory = Path(directory)
+        if self.directory.exists():
+            sweep_stale_tmp(self.directory)  # crash leftovers from prior runs
         self.keep = keep
         t_f = mu(n_groups, redundancy) * mtbf
         self.interval = tc_star(t_f, t_save, t_restart)
@@ -161,7 +241,8 @@ class CheckpointManager:
             self._thread = None
 
     def _gc(self) -> None:
-        dirs = sorted(self.directory.glob("step_*"))
+        dirs = sorted(p for p in self.directory.glob("step_*")
+                      if p.name.split("_")[1].isdigit())
         for old in dirs[: -self.keep]:
             for f in old.iterdir():
                 f.unlink()

@@ -98,7 +98,11 @@ class SimClock:
 
     def __init__(self, p: DESParams, seed: int, failure_model=None,
                  topology=None):
-        from ..scenarios.models import RenewalModel   # avoid import cycle
+        # local import to avoid the des <-> scenarios cycle; keep the
+        # window drain as an attribute so advance() pays no per-call
+        # import-machinery cost in the hot loop
+        from ..scenarios.models import RenewalModel, drain_event_window
+        self._drain = drain_event_window
         self.p = p
         self.rng = np.random.default_rng(seed)
         self.topology = topology
@@ -128,20 +132,15 @@ class SimClock:
 
     def advance(self, duration: float) -> float:
         """Advance the clock by a jittered duration; harvest failure
-        arrivals that land inside the window into ``pending``."""
+        arrivals that land inside the window into ``pending`` (via the
+        victim-batching loop shared with the live trainer bridge)."""
         dur = duration * self.jitter()
         end = self.now + dur
-        while self.next_fail <= end and self.alive > 0:
-            for victim in self.model.draw_victims(self.next_fail, self.dead):
-                if victim in self.dead:
-                    continue
-                self.pending.append(victim)
-                self.dead.add(victim)
-                self.alive -= 1
-                self.node_failures += 1
-            self.next_fail = self.model.next_arrival(
-                self.next_fail, max(self.alive, 1), self.p.n
-            )
+        events, self.next_fail, self.alive = self._drain(
+            self.model, self.next_fail, end, self.dead, self.alive, self.p.n)
+        for _, victims in events:
+            self.pending.extend(victims)
+            self.node_failures += len(victims)
         self.now = end
         return dur
 

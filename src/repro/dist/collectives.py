@@ -69,18 +69,25 @@ def compress_grad_int8(
     shape as ``grad``, ``scale`` is the scalar dequantization step, and
     ``new_error = (grad + error) - decompress(q, scale)``.
 
+    The whole arithmetic runs in fp32 regardless of ``grad``'s dtype:
+    :func:`decompress_grad_int8` dequantizes in fp32, so a residual
+    computed in e.g. bf16 would break the exact invariant above (the
+    bf16 rounding of ``x - q*scale`` diverges from the fp32 value the
+    receiver reconstructs). ``error`` carries the fp32 residual between
+    steps; ``new_error`` is always returned as fp32.
+
     The max quantization error of a single step is ``scale/2 <= scale``;
     with error feedback the *cumulative* transmitted signal converges to
     the cumulative true gradient, which is what makes aggressive 8-bit
     compression safe for SGD-family optimizers.
     """
-    x = grad + error
+    x = grad.astype(jnp.float32) + error.astype(jnp.float32)
     scale = jnp.max(jnp.abs(x)) / _INT8_MAX
     # all-zero tensors: keep scale 0 (q == 0, decompress == 0) but avoid
     # the 0/0 in the quantization divide
     safe = jnp.where(scale > 0, scale, 1.0)
     q = jnp.clip(jnp.round(x / safe), -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
-    new_error = x - q.astype(x.dtype) * scale
+    new_error = x - q.astype(jnp.float32) * scale
     return q, scale, new_error
 
 

@@ -5,17 +5,81 @@ CPU container it runs reduced configs end-to-end (``--smoke``, default);
 on a real TPU fleet the same entry point runs the full config on the
 production mesh (``--full`` uses the sharded train step the dry-run
 lowers; per-host data feeding via the same deterministic pipeline).
+
+Failure injection comes in two flavors:
+
+* ``--mtbf-steps K`` — the legacy toy injector: Poisson arrivals in step
+  time, uniform single-group victims;
+* ``--failure-model SPEC [--topology SPEC]`` — the scenario bridge
+  (:mod:`repro.train.injection`): any registered
+  :class:`repro.scenarios.models.FailureModel` drives the live trainer
+  through the cluster topology, so rack/pod bursts and trace replays
+  deliver *multi-group* kill batches to ``scheme.recover``. SPEC is a
+  registry name (``correlated``) or a JSON object
+  (``'{"kind": "correlated", "scope": "rack", "burst_prob": 0.5}'``).
+
+``--sweep-regimes`` ignores ``--arch`` and runs the trainer campaign
+preset instead: the tiny-config trainer across the three PR-2 regimes
+(weibull / rack-burst / trace replay), verifying the §3.1 gradient
+invariant after every recovery.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
+
+
+def _spec(arg: str | None):
+    """Parse a model/topology CLI spec: JSON object or bare name."""
+    if arg is None:
+        return None
+    arg = arg.strip()
+    if arg.startswith("{"):
+        return json.loads(arg)
+    return arg
+
+
+def _resolve_r(args) -> int:
+    """'-r 0 = Thm-4.3 optimal' — one policy for every launcher path."""
+    from repro.core.theory import r_star
+    return args.redundancy or max(2, min(r_star(args.n_groups),
+                                         args.n_groups - 1))
+
+
+def _sweep_regimes(args) -> None:
+    from repro.scenarios.campaign import (run_trainer_cell,
+                                          trainer_regime_cells)
+
+    cells = trainer_regime_cells(steps=args.steps, n=args.n_groups,
+                                 r=_resolve_r(args),
+                                 topology=_spec(args.topology),
+                                 seconds_per_step=args.seconds_per_step,
+                                 base_seed=args.seed)
+    rows = []
+    for cell in cells:
+        label = cell["model"].get("label", cell["model"]["kind"])
+        print(f"[sweep] {label}: N={cell['n']} r={cell['r']} "
+              f"steps={cell['steps']}", file=sys.stderr)
+        row = run_trainer_cell(cell)
+        rows.append(row)
+        print(f"[sweep] {label}: steps={row['steps_done']} "
+              f"failures={row['failures']} wipeouts={row['wipeouts']} "
+              f"reorders={row['reorders']} patches={row['patches']} "
+              f"multi_group={row['multi_group_events']} "
+              f"max_grad_err={row['max_grad_check_err']:.2e}")
+    multi = sum(r["multi_group_events"] for r in rows)
+    print(f"[sweep] total multi-group kill batches delivered to "
+          f"scheme.recover: {multi}")
+    if args.report_json:
+        with open(args.report_json, "w") as f:
+            json.dump(rows, f, indent=1)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--n-groups", type=int, default=8,
                     help="SPARe data-parallel degree N")
@@ -24,7 +88,26 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--per-type-batch", type=int, default=2)
     ap.add_argument("--mtbf-steps", type=float, default=0.0,
-                    help="inject failures every ~K steps (0 = none)")
+                    help="legacy Poisson injector: failures every ~K "
+                         "steps (0 = none)")
+    ap.add_argument("--failure-model", default=None,
+                    help="scenario-bridge injection: model name or JSON "
+                         "spec (repro.scenarios registry)")
+    ap.add_argument("--topology", default=None,
+                    help="cluster topology: preset name or JSON spec "
+                         "(default: small layout at N)")
+    ap.add_argument("--seconds-per-step", type=float, default=None,
+                    help="step duration on the failure model's clock "
+                         "(default: DES t_comp + t_allreduce)")
+    ap.add_argument("--verify-equivalence", action="store_true",
+                    help="check the §3.1 gradient invariant after every "
+                         "successful recovery")
+    ap.add_argument("--sweep-regimes", action="store_true",
+                    help="run the tiny-config trainer (seq=32, "
+                         "per-type batch 1, §3.1-verified) across the "
+                         "three PR-2 failure regimes and exit; honors "
+                         "--steps/--n-groups/-r/--seed/--topology/"
+                         "--seconds-per-step, ignores the other flags")
     ap.add_argument("--scheme", default="spare",
                     help="fault-tolerance scheme (repro.des registry: "
                          "spare | replication | ckpt_only | adaptive)")
@@ -35,15 +118,19 @@ def main() -> None:
     ap.add_argument("--report-json", default=None)
     args = ap.parse_args()
 
+    if args.sweep_regimes:
+        _sweep_regimes(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required (unless --sweep-regimes)")
+
     from repro.configs import get_config, smoke_config
-    from repro.core.theory import r_star
     from repro.des import get_scheme
     from repro.train.trainer import PoissonInjector, SpareTrainer
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.scaled(grad_accum=1)
-    r = args.redundancy or max(2, min(r_star(args.n_groups),
-                                      args.n_groups - 1))
+    r = _resolve_r(args)
     print(f"[train] arch={args.arch} N={args.n_groups} r={r} "
           f"scheme={args.scheme} steps={args.steps} "
           f"params={cfg.param_count():,}")
@@ -54,10 +141,19 @@ def main() -> None:
                            seed=args.seed, ckpt_dir=args.ckpt_dir,
                            base_lr=args.lr, total_steps=args.steps,
                            scheme=get_scheme(args.scheme, **scheme_kwargs))
-    injector = (PoissonInjector(args.mtbf_steps, seed=args.seed)
-                if args.mtbf_steps > 0 else None)
+    if args.failure_model is not None:
+        from repro.train.injection import ScenarioInjector
+        injector = ScenarioInjector(
+            _spec(args.failure_model), _spec(args.topology),
+            n_groups=args.n_groups,
+            seconds_per_step=args.seconds_per_step, seed=args.seed)
+    elif args.mtbf_steps > 0:
+        injector = PoissonInjector(args.mtbf_steps, seed=args.seed)
+    else:
+        injector = None
     t0 = time.time()
-    rep = trainer.run(args.steps, injector=injector)
+    rep = trainer.run(args.steps, injector=injector,
+                      verify_equivalence=args.verify_equivalence)
     dt = time.time() - t0
     print(f"[train] done: {rep.steps_done} steps in {dt:.1f}s "
           f"({dt / max(rep.steps_done, 1):.2f}s/step)")
@@ -65,10 +161,17 @@ def main() -> None:
           f"failures={rep.failures} wipeouts={rep.wipeouts} "
           f"reorders={rep.reorders} patches={rep.patches} "
           f"S_A={trainer.state.s_a} ckpts={rep.ckpt_saves}")
+    if rep.events:
+        print(f"[train] recovery events={len(rep.events)} "
+              f"multi_group={rep.multi_group_events} "
+              f"rollback_steps={rep.rollback_steps} "
+              f"max_grad_err={rep.max_grad_check_err:.2e}")
     if args.report_json:
         with open(args.report_json, "w") as f:
             json.dump({"losses": rep.losses, "failures": rep.failures,
-                       "wipeouts": rep.wipeouts, "steps": rep.steps_done},
+                       "wipeouts": rep.wipeouts, "steps": rep.steps_done,
+                       "multi_group_events": rep.multi_group_events,
+                       "max_grad_check_err": rep.max_grad_check_err},
                       f)
 
 

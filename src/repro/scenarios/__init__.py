@@ -41,6 +41,9 @@ from .models import (
     bundled_traces,
     load_trace,
     sample_kill_batches,
+    bind_model,
+    drain_event_window,
+    to_step_events,
 )
 from .campaign import (
     CampaignSpec,
@@ -61,6 +64,7 @@ __all__ = [
     "DiurnalModel", "TraceReplayModel", "SuperposedModel",
     "get_failure_model", "list_failure_models", "register_failure_model",
     "model_from_spec", "bundled_traces", "load_trace", "sample_kill_batches",
+    "bind_model", "drain_event_window", "to_step_events",
     "CampaignSpec", "ScenarioCell", "CAMPAIGN_PRESETS", "cell_seed",
     "run_cell", "run_campaign", "parallel_map", "aggregate",
     "ranking_by_regime", "save_artifacts",

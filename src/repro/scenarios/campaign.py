@@ -36,6 +36,7 @@ __all__ = [
     "ScenarioCell", "CampaignSpec", "CAMPAIGN_PRESETS",
     "cell_seed", "run_cell", "run_campaign", "parallel_map",
     "aggregate", "ranking_by_regime", "save_artifacts",
+    "TRAINER_REGIME_MODELS", "trainer_regime_cells", "run_trainer_cell",
 ]
 
 #: SimResult fields copied into each cell's result row (all deterministic)
@@ -306,6 +307,95 @@ def save_artifacts(name: str, results: list[dict],
     csv_path.write_text(csv_text)
     json_path.write_text(_canon(obj) + "\n")
     return csv_path, json_path
+
+
+# ------------------------------------------------------------------ #
+# live-trainer cells (the injection-bridge sweep)                    #
+# ------------------------------------------------------------------ #
+#: the three PR-2 regimes at trainer scale: MTBFs sized so a tiny
+#: (~40-step, ~64 s/step) run sees several events, including
+#: multi-group rack bursts; the trace regime replays the HSDP-style
+#: storm log compressed to the same horizon
+TRAINER_REGIME_MODELS = [
+    {"kind": "weibull", "label": "weibull", "mtbf": 350.0},
+    {"kind": "correlated", "label": "rack_burst", "scope": "rack",
+     "burst_prob": 0.5, "mtbf": 450.0},
+    {"kind": "trace", "label": "trace_rackstorm",
+     "trace": "meta_hsdp_rackstorm", "time_scale": 0.1},
+]
+
+
+def trainer_regime_cells(arch: str = "qwen2.5-3b", n: int = 8, r: int = 3,
+                         steps: int = 40, seq: int = 32,
+                         per_type_batch: int = 1,
+                         models: list | None = None, topology=None,
+                         seconds_per_step: float | None = None,
+                         base_seed: int = 0) -> list[dict]:
+    """The live-trainer campaign preset: one cell per failure regime,
+    tiny config, rack-dominated topology (2 hosts/group, 4 hosts/rack =>
+    2 groups per rack, so rack kills are genuine multi-group batches).
+    ``topology`` may be a preset name or a spec dict."""
+    if topology is None:
+        topology = {"n_groups": n, "hosts_per_group": 2,
+                    "hosts_per_rack": 4}
+    cells = []
+    for model in (models if models is not None else TRAINER_REGIME_MODELS):
+        cell = {
+            "kind": "trainer", "arch": arch, "n": n, "r": r,
+            "steps": steps, "seq": seq, "per_type_batch": per_type_batch,
+            "model": dict(model),
+            "topology": (dict(topology) if isinstance(topology, dict)
+                         else topology),
+            "seed": 0, "base_seed": base_seed,
+        }
+        if seconds_per_step is not None:
+            cell["seconds_per_step"] = seconds_per_step
+        cells.append(cell)
+    return cells
+
+
+def run_trainer_cell(cell: dict) -> dict:
+    """Worker entry point for live-trainer cells: drive the real
+    :class:`repro.train.trainer.SpareTrainer` through the cell's failure
+    regime via the injection bridge, verifying the §3.1 gradient
+    invariant after every successful recovery."""
+    from ..configs import smoke_config
+    from ..train.injection import ScenarioInjector
+    from ..train.trainer import SpareTrainer
+
+    seed = cell_seed(cell, base_seed=cell.get("base_seed", 0))
+    cfg = smoke_config(cell.get("arch", "qwen2.5-3b")).scaled(grad_accum=1)
+    topo = topology_from_spec(cell.get("topology"), n_groups=cell["n"])
+    injector = ScenarioInjector(
+        cell["model"], topo, n_groups=cell["n"],
+        seconds_per_step=cell.get("seconds_per_step"), seed=seed)
+    trainer = SpareTrainer(
+        cfg, n_groups=cell["n"], redundancy=cell["r"],
+        seq=cell.get("seq", 32),
+        per_type_batch=cell.get("per_type_batch", 1), seed=seed,
+        total_steps=cell["steps"])
+    t0 = time.perf_counter()
+    rep = trainer.run(cell["steps"], injector=injector,
+                      verify_equivalence=cell.get("verify", True))
+    elapsed = time.perf_counter() - t0
+    return {
+        "key": cell_key(cell),
+        "model": cell["model"].get("label", cell["model"]["kind"]),
+        "n": cell["n"], "r": cell["r"],
+        "steps_done": rep.steps_done,
+        "failures": rep.failures,
+        "wipeouts": rep.wipeouts,
+        "reorders": rep.reorders,
+        "patches": rep.patches,
+        "recovery_events": len(rep.events),
+        "multi_group_events": rep.multi_group_events,
+        "rollback_steps": rep.rollback_steps,
+        "max_grad_check_err": rep.max_grad_check_err,
+        "final_s_a": int(trainer.state.s_a),
+        "loss_first": rep.losses[0] if rep.losses else None,
+        "loss_last": rep.losses[-1] if rep.losses else None,
+        "elapsed_s": elapsed,
+    }
 
 
 # ------------------------------------------------------------------ #

@@ -54,6 +54,7 @@ __all__ = [
     "DiurnalModel", "TraceReplayModel", "SuperposedModel",
     "register_failure_model", "get_failure_model", "list_failure_models",
     "model_from_spec", "bundled_traces", "load_trace", "sample_kill_batches",
+    "bind_model", "drain_event_window", "to_step_events",
 ]
 
 TRACES_DIR = Path(__file__).parent / "traces"
@@ -450,6 +451,89 @@ class SuperposedModel(FailureModel):
         for m in self.models:
             m.reset(now, alive, n)
         return self._arm(now, alive, n)
+
+
+# ------------------------------------------------------------------ #
+# event-stream adapters                                              #
+# ------------------------------------------------------------------ #
+def drain_event_window(model: FailureModel, next_fail: float, end: float,
+                       dead: set[int], alive: int, n: int,
+                       ) -> tuple[list[tuple[float, list[int]]], float, int]:
+    """Harvest every failure event with arrival time ``<= end``.
+
+    The one victim-batching loop shared by the DES clock
+    (:meth:`repro.des.engine.SimClock.advance`) and the live trainer
+    bridge (:class:`repro.train.injection.ScenarioInjector`): per event,
+    one ``draw_victims`` call (already-dead victims filtered) followed by
+    one ``next_arrival`` re-arm — exactly the RNG-draw order the legacy
+    parity tests pin down.
+
+    ``dead`` is mutated in place; returns ``(events, next_fail, alive)``
+    where ``events`` is one ``(arrival_time, victims)`` entry per event
+    that killed at least one live group.
+    """
+    events: list[tuple[float, list[int]]] = []
+    while next_fail <= end and alive > 0:
+        victims: list[int] = []
+        for v in model.draw_victims(next_fail, dead):
+            if v in dead:
+                continue
+            dead.add(v)
+            alive -= 1
+            victims.append(v)
+        if victims:
+            events.append((next_fail, victims))
+        next_fail = model.next_arrival(next_fail, max(alive, 1), n)
+    return events, next_fail, alive
+
+
+def bind_model(model, n: int, rng: np.random.Generator,
+               topology=None, params=None):
+    """Coerce specs and bind a model for an ``n``-group system: returns
+    ``(model, params, topology)`` with ``params.n`` forced to ``n`` and
+    the topology validated against it (a mismatched layout would resolve
+    blast radii to group ids outside ``[0, n)``). The one entry point
+    shared by :func:`to_step_events` and the live trainer bridge."""
+    from ..des.params import DESParams
+
+    model = model_from_spec(model)
+    p = params if params is not None else DESParams(n=n)
+    if p.n != n:
+        p = p.with_(n=n)
+    topology = topology_from_spec(topology, n_groups=n)
+    if topology.n_groups != n:
+        raise ValueError(f"topology has n_groups={topology.n_groups} "
+                         f"but the event stream targets n_groups={n}")
+    model.bind(p, rng, topology)
+    return model, p, topology
+
+
+def to_step_events(model, n: int, *, seconds_per_step: float,
+                   max_steps: int, rng: np.random.Generator,
+                   topology: ClusterTopology | None = None,
+                   params=None) -> list[tuple[int, list[int]]]:
+    """Open-loop step-clock view of a failure model: bind it and map its
+    arrival stream onto the trainer's step counter, resolving blast radii
+    to DP-group victim batches.
+
+    Returns ``[(step_index, victims), ...]`` for every event landing in
+    ``[0, max_steps * seconds_per_step)``, where ``step_index ==
+    floor(arrival / seconds_per_step)`` — the step whose all-reduce
+    detects the failure. Groups stay dead for the rest of the horizon
+    (no restarts), so this is the planning/analysis view; the *closed*
+    loop — where wipe-outs restore capacity and re-arm the model — is
+    :class:`repro.train.injection.ScenarioInjector`.
+    """
+    if seconds_per_step <= 0:
+        raise ValueError("seconds_per_step must be positive")
+    model, _, _ = bind_model(model, n, rng, topology=topology,
+                             params=params)
+    dead: set[int] = set()
+    horizon = max_steps * seconds_per_step
+    first = model.next_arrival(0.0, n, n)
+    events, _, _ = drain_event_window(model, first, horizon, dead, n, n)
+    return [(int(t // seconds_per_step), victims)
+            for t, victims in events if t < horizon]
 
 
 # ------------------------------------------------------------------ #

@@ -1,4 +1,5 @@
+from .injection import ScenarioInjector, StepEvent
 from .step import make_prefill, make_serve_step, make_train_step, weighted_loss
 
 __all__ = ["make_train_step", "make_serve_step", "make_prefill",
-           "weighted_loss"]
+           "weighted_loss", "ScenarioInjector", "StepEvent"]

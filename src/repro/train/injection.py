@@ -1,0 +1,134 @@
+"""Live-failure bridge: drive :class:`SpareTrainer` from repro.scenarios.
+
+The scenario engine (PR 2) made the failure regime a pluggable axis for
+the *simulator*; this module closes the loop for the real trainer. A
+:class:`ScenarioInjector` binds any registered
+:class:`repro.scenarios.models.FailureModel` plus a
+:class:`repro.scenarios.topology.ClusterTopology` to the live training
+loop:
+
+* model arrival times (seconds) convert to the trainer's *step clock* —
+  each step advances the bridge by ``seconds_per_step`` (default: the
+  DES step cost ``t_comp + t_allreduce``) and every arrival landing in
+  that window surfaces at the step's all-reduce;
+* blast radii resolve to DP-group victim *batches* through the topology
+  (a rack kill delivers all of its groups in one event), exactly the
+  shared :func:`repro.scenarios.models.drain_event_window` loop the DES
+  clock uses;
+* the trainer delivers each event batch to ``scheme.recover`` in one
+  call, so the recovery controller sees simultaneous multi-group kills —
+  the path that was DES-only before this bridge;
+* on wipe-out the trainer calls :meth:`notify_wipeout`: the bridge
+  advances its wall clock past the restart outage and re-arms the model
+  (trace replay skips events that landed while the system was down,
+  renewal streams re-draw at full capacity).
+
+The bridge satisfies the plain injector protocol
+(``injector(state) -> list[int]``) for drop-in use, but
+:meth:`SpareTrainer.run` detects :meth:`poll` and consumes per-event
+batches so recovery outcomes are recorded event by event.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.state import SpareState
+from repro.des.params import DESParams
+from repro.scenarios.models import bind_model, drain_event_window
+from repro.scenarios.topology import ClusterTopology
+
+__all__ = ["StepEvent", "ScenarioInjector"]
+
+
+class StepEvent:
+    """One failure event delivered at a step's all-reduce.
+
+    ``victims`` is the full simultaneous-kill set (blast radius minus
+    already-dead groups); ``time`` is the model's arrival clock in
+    seconds; ``step`` is the bridge's own monotone poll index — it
+    matches the trainer's step counter until the first wipe-out rolls
+    that counter back, after which the two diverge by the cumulative
+    rollback depth (the trainer-side step of each recovery is recorded
+    in :class:`repro.train.trainer.RecoveryEvent.step`).
+    """
+
+    __slots__ = ("step", "time", "victims")
+
+    def __init__(self, step: int, time: float, victims: list[int]):
+        self.step = step
+        self.time = time
+        self.victims = list(victims)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"StepEvent(step={self.step}, time={self.time:.1f}, "
+                f"victims={self.victims})")
+
+
+class ScenarioInjector:
+    """Step-time failure injection from a scenario model + topology.
+
+    Parameters
+    ----------
+    model: failure-model spec — registry name, ``{"kind": ...}`` dict, or
+        a :class:`FailureModel` instance (see :func:`model_from_spec`).
+    topology: cluster layout — preset name, dict, instance, or ``None``
+        for the default small layout at ``n_groups``.
+    n_groups: the trainer's data-parallel degree N (must match the
+        trainer this injector drives).
+    seconds_per_step: wall seconds one trainer step represents on the
+        model's clock; defaults to ``params.t_comp + params.t_allreduce``
+        (the DES per-step cost, so DES-calibrated MTBFs carry over).
+    params: :class:`DESParams` the model binds against (MTBF, Weibull
+        shape, restart latency...); ``n`` is forced to ``n_groups``.
+    seed: RNG seed for arrival draws and victim choices.
+    """
+
+    def __init__(self, model, topology=None, *, n_groups: int,
+                 seconds_per_step: float | None = None,
+                 params: DESParams | None = None, seed: int = 0):
+        self.n = n_groups
+        self.rng = np.random.default_rng(seed)
+        self.model, self.p, self.topology = bind_model(
+            model, n_groups, self.rng, topology=topology, params=params)
+        self.seconds_per_step = (seconds_per_step
+                                 if seconds_per_step is not None
+                                 else self.p.t_comp + self.p.t_allreduce)
+        if self.seconds_per_step <= 0:
+            raise ValueError("seconds_per_step must be positive")
+        self.clock = 0.0                 # model-time seconds elapsed
+        self.step = 0                    # step windows polled
+        self._next_fail = self.model.next_arrival(0.0, self.n, self.n)
+        self.events_delivered = 0
+        self.victims_delivered = 0
+
+    # ------------------------------------------------------------- #
+    def poll(self, state: SpareState) -> list[StepEvent]:
+        """Advance one step on the model clock; return the failure
+        events whose arrival landed inside the step window, one
+        :class:`StepEvent` per model event (victims already resolved to
+        live DP groups through the topology)."""
+        dead = set(int(w) for w in np.flatnonzero(~state.alive))
+        alive = int(state.alive.sum())
+        end = self.clock + self.seconds_per_step
+        events, self._next_fail, _ = drain_event_window(
+            self.model, self._next_fail, end, dead, alive, self.n)
+        self.clock = end
+        out = [StepEvent(self.step, t, victims) for t, victims in events]
+        self.step += 1
+        self.events_delivered += len(out)
+        self.victims_delivered += sum(len(e.victims) for e in out)
+        return out
+
+    def __call__(self, state: SpareState) -> list[int]:
+        """Plain-injector protocol: the flattened victim set of every
+        event in this step's window (one merged batch)."""
+        return [w for ev in self.poll(state) for w in ev.victims]
+
+    # ------------------------------------------------------------- #
+    def notify_wipeout(self) -> None:
+        """The trainer wiped out and restarts: account the restart
+        outage on the model clock and re-arm the arrival stream at full
+        capacity (trace replay drops events that hit the downed system;
+        renewal models re-draw)."""
+        self.clock += self.p.t_restart
+        self._next_fail = self.model.reset(self.clock, self.n, self.n)

@@ -19,8 +19,15 @@ protocol decision point shared by both):
     the scheme for a recovery decision (RECTLR for SPARe), performs
     patch compute by re-dispatching with the updated schedule, and
     continues;
+  * injectors may be plain callables (``injector(state) -> [groups]``,
+    e.g. :class:`PoissonInjector`) or a scenario bridge exposing
+    ``poll(state) -> [StepEvent]`` (:class:`repro.train.injection
+    .ScenarioInjector`): each event's victim batch — a whole rack/pod
+    blast radius at once — reaches ``scheme.recover`` in ONE call, and
+    every recovery outcome is recorded in ``TrainReport.events``;
   * wipe-out -> global restart: state.reset(), rollback to the last
-    snapshot (in-memory tier) or disk checkpoint;
+    in-memory snapshot (always kept, even with no checkpoint directory)
+    or disk checkpoint;
   * S_A changes recompile the step once per depth (cached).
 
 The trainer runs the *real protocol* at laptop scale (N groups emulated
@@ -47,7 +54,8 @@ from repro.models.config import ModelConfig
 from repro.optim import adamw_init
 from repro.train.step import make_train_step
 
-__all__ = ["SpareTrainer", "PoissonInjector", "TrainReport"]
+__all__ = ["SpareTrainer", "PoissonInjector", "TrainReport",
+           "RecoveryEvent"]
 
 
 class PoissonInjector:
@@ -80,6 +88,26 @@ class PoissonInjector:
 
 
 @dataclass
+class RecoveryEvent:
+    """Outcome of one failure event's ``scheme.recover`` call."""
+
+    step: int                        # trainer step at detection
+    victims: list[int]               # simultaneous-kill set (>=1 group)
+    wipeout: bool
+    reordered: bool
+    patch_count: int
+    s_a_before: int
+    s_a_after: int
+    moves: int = 0
+    rollback_depth: int = 0          # steps rolled back (wipe-out only)
+    grad_check_err: float | None = None   # §3.1 relative error, if verified
+
+    @property
+    def multi_group(self) -> bool:
+        return len(self.victims) > 1
+
+
+@dataclass
 class TrainReport:
     steps_done: int = 0
     losses: list = field(default_factory=list)
@@ -90,6 +118,21 @@ class TrainReport:
     recompiles: int = 0
     ckpt_saves: int = 0
     controller_seconds: float = 0.0
+    events: list = field(default_factory=list)   # list[RecoveryEvent]
+
+    @property
+    def multi_group_events(self) -> int:
+        return sum(1 for e in self.events if e.multi_group)
+
+    @property
+    def rollback_steps(self) -> int:
+        return sum(e.rollback_depth for e in self.events)
+
+    @property
+    def max_grad_check_err(self) -> float:
+        errs = [e.grad_check_err for e in self.events
+                if e.grad_check_err is not None]
+        return max(errs) if errs else 0.0
 
 
 class SpareTrainer:
@@ -125,6 +168,10 @@ class SpareTrainer:
             self.ckpt = CheckpointManager(
                 ckpt_dir, n_groups=n_groups, redundancy=redundancy,
                 mtbf=mtbf, t_save=t_save, t_restart=t_restart)
+        # in-memory snapshot fallback when no checkpoint directory is
+        # configured: a wipe-out must still roll params/step back (the
+        # memory tier is free — it needs no storage at all)
+        self._snapshot: tuple[int, Any] | None = None
         self.step = 0
 
     # ---------------------------------------------------------------- #
@@ -141,48 +188,132 @@ class SpareTrainer:
         return fn(self.params, self.opt_state, batch)
 
     # ---------------------------------------------------------------- #
-    def run(self, steps: int,
-            injector: Callable[[SpareState], list[int]] | None = None,
-            snapshot_every: int = 10) -> TrainReport:
-        report = TrainReport()
+    # snapshot tiers                                                   #
+    # ---------------------------------------------------------------- #
+    def _snapshot_now(self) -> None:
+        """Record the rollback point: the CheckpointManager's memory tier
+        when one is configured, else the trainer's own host-side copy —
+        a wipe-out must never keep post-failure params."""
         if self.ckpt is not None:
             self.ckpt.snapshot(self.step, (self.params, self.opt_state))
+        else:
+            self._snapshot = (self.step, jax.tree.map(
+                np.asarray, (self.params, self.opt_state)))
+
+    def _rollback(self) -> tuple[int, Any]:
+        if self.ckpt is not None:
+            return self.ckpt.rollback()
+        assert self._snapshot is not None, "no snapshot taken yet"
+        return self._snapshot
+
+    def _poll_events(self, injector) -> list[list[int]]:
+        """One victim batch per failure event this step. A scenario
+        bridge (``poll``) yields per-event blast radii; a plain callable
+        yields at most one merged batch."""
+        if injector is None:
+            return []
+        poll = getattr(injector, "poll", None)
+        if poll is not None:
+            return [ev.victims for ev in poll(self.state)]
+        failed = injector(self.state)
+        return [list(failed)] if failed else []
+
+    # ---------------------------------------------------------------- #
+    def run(self, steps: int,
+            injector: Callable[[SpareState], list[int]] | None = None,
+            snapshot_every: int = 10,
+            verify_equivalence: bool = False,
+            equivalence_tol: float = 1e-2) -> TrainReport:
+        report = TrainReport()
+        self._snapshot_now()
         target = self.step + steps
         while self.step < target:
-            failed = injector(self.state) if injector is not None else []
-            if failed:
+            wiped = False
+            for victims in self._poll_events(injector):
                 # detection at the all-reduce: the in-flight step fails;
-                # the pluggable scheme decides wipe-out vs. mask/reorder
-                report.failures += len(failed)
-                outcome = self.scheme.recover(self.state, failed,
+                # the pluggable scheme decides wipe-out vs. mask/reorder.
+                # Every event's full victim batch (a rack/pod blast
+                # radius at once) reaches recover() in ONE call.
+                victims = [int(w) for w in victims if self.state.alive[w]]
+                if not victims:
+                    continue
+                report.failures += len(victims)
+                outcome = self.scheme.recover(self.state, victims,
                                               step=self.step)
                 report.controller_seconds += outcome.controller_seconds
+                event = RecoveryEvent(
+                    step=self.step, victims=victims,
+                    wipeout=outcome.wipeout, reordered=outcome.reordered,
+                    patch_count=outcome.patch_count,
+                    s_a_before=outcome.s_a_before,
+                    s_a_after=outcome.s_a_after, moves=outcome.moves)
                 if outcome.wipeout:
                     report.wipeouts += 1
                     self.state.reset()
-                    if self.ckpt is not None:
-                        self.step, (self.params, self.opt_state) = \
-                            self.ckpt.rollback()
-                    continue
+                    rolled_from = self.step
+                    self.step, (self.params, self.opt_state) = \
+                        self._rollback()
+                    event.rollback_depth = rolled_from - self.step
+                    notify = getattr(injector, "notify_wipeout", None)
+                    if notify is not None:
+                        notify()     # outage elapsed; re-arm the model
+                    report.events.append(event)
+                    wiped = True
+                    break   # later events hit a system already down
                 report.reorders += int(outcome.reordered)
                 report.patches += outcome.patch_count
+                if verify_equivalence:
+                    # §3.1 invariant: the recovered schedule must still
+                    # collect vanilla DP's exact batch gradient
+                    event.grad_check_err = self.equivalence_error()
+                    if event.grad_check_err > equivalence_tol:
+                        raise RuntimeError(
+                            f"§3.1 gradient equivalence violated after "
+                            f"recovering {victims} at step {self.step}: "
+                            f"rel err {event.grad_check_err:.3e} > "
+                            f"{equivalence_tol:.3e}")
+                report.events.append(event)
                 # patch compute + shrink happened; schedule is consistent
                 # again — the step below re-collects every type
+            if wiped:
+                continue
             new_params, new_opt, metrics = self._dispatch(report)
             self.params, self.opt_state = new_params, new_opt
             report.losses.append(float(metrics["loss"]))
             self.step += 1
             report.steps_done += 1
-            if self.ckpt is not None and self.step % snapshot_every == 0:
-                self.ckpt.snapshot(self.step, (self.params, self.opt_state))
-                self.ckpt.maybe_save(self.step,
-                                     (self.params, self.opt_state))
-                report.ckpt_saves = self.ckpt.saves
+            if self.step % snapshot_every == 0:
+                self._snapshot_now()
+                if self.ckpt is not None:
+                    self.ckpt.maybe_save(self.step,
+                                         (self.params, self.opt_state))
+                    report.ckpt_saves = self.ckpt.saves
         if self.ckpt is not None:
             self.ckpt.wait()
+            # forced/trailing saves land between snapshot boundaries:
+            # refresh after the final wait so the report counts them all
+            report.ckpt_saves = self.ckpt.saves
         return report
 
     # ---------------------------------------------------------------- #
+    def _batch_grads(self, batch: dict):
+        """Jitted total-batch gradient (compiled once per stack shape —
+        the §3.1 oracle runs after every recovery when verification is
+        on, so the eager path would dominate the run)."""
+        if getattr(self, "_grad_fn", None) is None:
+            from repro.train.step import weighted_loss
+
+            def total_loss(params, batch):
+                def body(acc, micro):
+                    return acc + weighted_loss(self.model, params,
+                                               micro), None
+                out, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                      batch)
+                return out
+
+            self._grad_fn = jax.jit(jax.grad(total_loss))
+        return self._grad_fn(self.params, batch)
+
     def vanilla_reference_grads(self, step: int | None = None):
         """Vanilla-DP gradient of the same logical batch (all N types,
         weight 1/N each) — the §3.1 equivalence oracle used by tests."""
@@ -190,15 +321,22 @@ class SpareTrainer:
         pristine = SpareState(self.state.n, self.state.r)
         batch_np = spare_batch(self.pipeline, pristine, step)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        from repro.train.step import weighted_loss
+        return self._batch_grads(batch)
 
-        def total_loss(params):
-            def body(acc, micro):
-                return acc + weighted_loss(self.model, params, micro), None
-            out, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), batch)
-            return out
-
-        return jax.grad(total_loss)(self.params)
+    def equivalence_error(self, step: int | None = None) -> float:
+        """§3.1 check: relative gradient-equivalence error of the current
+        schedule vs the vanilla-DP oracle — ``max |g_spare - g_vanilla|
+        / max(max |g_vanilla|, 1)``. Zero for a healthy system; fp32
+        summation-order noise only after any successful recovery."""
+        ref = self.vanilla_reference_grads(step)
+        got = self.spare_grads(step)
+        diff = jax.tree.reduce(max, jax.tree.map(
+            lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                       - b.astype(jnp.float32)).max()),
+            ref, got))
+        scale = jax.tree.reduce(max, jax.tree.map(
+            lambda a: float(jnp.abs(a.astype(jnp.float32)).max()), ref))
+        return diff / max(scale, 1.0)
 
     def spare_grads(self, step: int | None = None):
         """Gradient under the *current* (possibly failed/reordered)
@@ -206,12 +344,4 @@ class SpareTrainer:
         step = self.step if step is None else step
         batch_np = spare_batch(self.pipeline, self.state, step)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        from repro.train.step import weighted_loss
-
-        def total_loss(params):
-            def body(acc, micro):
-                return acc + weighted_loss(self.model, params, micro), None
-            out, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), batch)
-            return out
-
-        return jax.grad(total_loss)(self.params)
+        return self._batch_grads(batch)

@@ -76,3 +76,47 @@ def test_compression_ratio():
     g = jnp.zeros((1024, 1024), jnp.float32)
     q, scale, _ = compress_grad_int8(g, jnp.zeros_like(g))
     assert q.size * q.dtype.itemsize * 4 == g.size * g.dtype.itemsize
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_error_feedback_invariant_across_dtypes(dtype, seed):
+    """The documented invariant ``restored + new_error == grad + error``
+    must hold for non-fp32 grads too: the residual is computed in fp32
+    (the dtype decompress returns), not in ``grad.dtype`` — a bf16
+    residual silently lost ~1e-2 of relative signal per step."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(257,)) * 10.0 ** rng.integers(-3, 3),
+                    dtype)
+    err = jnp.asarray(rng.normal(size=(257,)) * 1e-3, jnp.float32)
+    q, scale, new_err = compress_grad_int8(g, err)
+    assert new_err.dtype == jnp.float32
+    restored = decompress_grad_int8(q, scale)
+    x = g.astype(jnp.float32) + err
+    # the residual is exactly what the receiver is missing...
+    np.testing.assert_array_equal(np.asarray(new_err),
+                                  np.asarray(x - restored))
+    # ...so the transmitted + residual signal reconstructs x to fp32
+    # rounding of a single addition (half an ulp), not dtype rounding
+    np.testing.assert_allclose(np.asarray(restored + new_err),
+                               np.asarray(x),
+                               rtol=1e-7, atol=float(scale) * 1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_error_feedback_unbiased_for_low_precision_grads(dtype):
+    """EF long-run unbiasedness survives low-precision grads now that
+    the residual no longer collapses to the grad dtype."""
+    rng = np.random.default_rng(5)
+    g32 = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    g = g32.astype(dtype)
+    err = jnp.zeros((256,), jnp.float32)
+    sent = jnp.zeros((256,), jnp.float32)
+    steps = 50
+    for _ in range(steps):
+        q, scale, err = compress_grad_int8(g, err)
+        sent = sent + decompress_grad_int8(q, scale)
+    target = g.astype(jnp.float32)
+    rel = float(jnp.linalg.norm(sent / steps - target)
+                / jnp.linalg.norm(target))
+    assert rel < 0.01

@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ckpt import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.ckpt import (CheckpointManager, restore_checkpoint,
+                        save_checkpoint, sweep_stale_tmp)
 from repro.core.theory import mu, tc_star
 
 
@@ -65,6 +66,100 @@ def test_snapshot_survives_donation(tmp_path):
     _ = f(x)                              # donates/deletes x
     step, tree = mgr.rollback()
     np.testing.assert_array_equal(np.asarray(tree["x"]), np.ones((4,)))
+
+
+def test_crash_leftover_tmp_does_not_break_restore(tmp_path):
+    """Regression: a crash mid-save must leave restore working. The old
+    staging name ``step_<n>.tmp`` matched the ``step_*`` glob and made
+    ``int("00000100.tmp")`` raise on every subsequent restore."""
+    t = _tree()
+    save_checkpoint(tmp_path, 1, t)
+    # plant crash leftovers in both the legacy and the current form
+    legacy = tmp_path / "step_00000100.tmp"
+    legacy.mkdir()
+    (legacy / "shard_0.npz").write_bytes(b"partial garbage")
+    (tmp_path / ".tmp_step_00000002").mkdir()
+    step, restored = restore_checkpoint(tmp_path, t)   # must not raise
+    assert step == 1
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 t, restored)
+
+
+def test_manager_sweeps_stale_tmp_on_init(tmp_path):
+    save_checkpoint(tmp_path, 3, _tree())
+    (tmp_path / ".tmp_step_00000004").mkdir()
+    (tmp_path / "step_00000005.tmp").mkdir()
+    (tmp_path / ".old_step_00000003").mkdir()
+    mgr = CheckpointManager(tmp_path, n_groups=8, redundancy=3, mtbf=300,
+                            t_save=60, t_restart=3600)
+    assert not (tmp_path / ".tmp_step_00000004").exists()
+    assert not (tmp_path / "step_00000005.tmp").exists()
+    assert not (tmp_path / ".old_step_00000003").exists()
+    step, _ = mgr.restore_latest(_tree())
+    assert step == 3
+
+
+def test_sweep_stale_tmp_leaves_real_checkpoints(tmp_path):
+    save_checkpoint(tmp_path, 2, _tree())
+    (tmp_path / ".tmp_step_00000009").mkdir()
+    removed = sweep_stale_tmp(tmp_path)
+    assert [p.name for p in removed] == [".tmp_step_00000009"]
+    assert (tmp_path / "step_00000002").is_dir()
+
+
+def test_crash_inside_overwrite_commit_recovers_parked_copy(tmp_path):
+    """A crash between parking the old step dir and committing the new
+    one must not lose the checkpoint: the sweep renames the complete
+    parked copy back instead of deleting the only good copy."""
+    t = _tree()
+    save_checkpoint(tmp_path, 5, t)
+    # simulate the crash window of a re-save of step 5: the committed
+    # name is gone (parked), the staging dir holds the half-done new copy
+    (tmp_path / "step_00000005").rename(tmp_path / ".old_step_00000005")
+    (tmp_path / ".tmp_step_00000005").mkdir()
+    # the bare restore API reads the parked copy in place (no rename —
+    # a rename here could race a concurrent in-flight commit)...
+    step, restored = restore_checkpoint(tmp_path, t)
+    assert step == 5
+    assert (tmp_path / ".old_step_00000005").is_dir()
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 t, restored)
+    # ...and the manager's init sweep heals the name and clears the
+    # staging leftover
+    mgr = CheckpointManager(tmp_path, n_groups=8, redundancy=3, mtbf=300,
+                            t_save=60, t_restart=3600)
+    assert not (tmp_path / ".tmp_step_00000005").exists()
+    assert not (tmp_path / ".old_step_00000005").exists()
+    assert (tmp_path / "step_00000005").is_dir()
+    step, restored = mgr.restore_latest(t)
+    assert step == 5
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 t, restored)
+
+
+def test_resave_same_step_after_rollback(tmp_path):
+    """Re-saving a step the directory already holds (the wipe-out →
+    rollback → retrain path) must replace it, not crash the rename."""
+    t = _tree()
+    save_checkpoint(tmp_path, 5, t)
+    bumped = jax.tree.map(lambda x: x + 1, t)
+    save_checkpoint(tmp_path, 5, bumped)               # must not raise
+    step, restored = restore_checkpoint(tmp_path, t)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]) + 1)
+    # no stray staging/parked dirs left behind
+    assert [p.name for p in tmp_path.iterdir()] == ["step_00000005"]
+
+
+def test_manager_resave_same_step(tmp_path):
+    mgr = CheckpointManager(tmp_path, n_groups=8, redundancy=3, mtbf=300,
+                            t_save=60, t_restart=3600)
+    t = _tree()
+    assert mgr.maybe_save(7, t, force=True, block=True)
+    assert mgr.maybe_save(7, t, force=True, block=True)
+    step, _ = mgr.restore_latest(t)
+    assert step == 7 and mgr.saves == 2
 
 
 def test_universal_restore_across_dtypes(tmp_path):

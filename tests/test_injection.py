@@ -1,0 +1,222 @@
+"""Live-failure bridge: repro.scenarios driving the real SpareTrainer.
+
+Covers the ISSUE-3 acceptance points: the trainer completes CPU-scale
+runs under each PR-2 regime (weibull / rack-burst / trace replay),
+multi-group batch kills reach ``scheme.recover`` in one call, the §3.1
+gradient-equivalence invariant holds after every recovery, and a
+wipe-out without a checkpoint directory genuinely rolls params back.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.des.params import DESParams
+from repro.scenarios import ClusterTopology, to_step_events
+from repro.train.injection import ScenarioInjector, StepEvent
+from repro.train.trainer import SpareTrainer
+
+#: 2 hosts/group, 4 hosts/rack => every rack holds exactly 2 DP groups,
+#: so a rack kill is always a genuine multi-group batch
+RACKY_TOPO = ClusterTopology(n_groups=8, hosts_per_group=2,
+                             hosts_per_rack=4)
+
+RACK_BURST = {"kind": "correlated", "scope": "rack", "burst_prob": 1.0,
+              "mtbf": 400.0}
+
+
+def _tiny_trainer(**kw):
+    cfg = smoke_config("qwen2.5-3b").scaled(grad_accum=1)
+    kw.setdefault("n_groups", 8)
+    kw.setdefault("redundancy", 3)
+    kw.setdefault("seq", 32)
+    kw.setdefault("per_type_batch", 1)
+    kw.setdefault("total_steps", 200)
+    return SpareTrainer(cfg, **kw)
+
+
+# ------------------------------------------------------------------ #
+# the step-clock adapter                                             #
+# ------------------------------------------------------------------ #
+def test_to_step_events_deterministic_and_multi_group():
+    spec = {"kind": "correlated", "scope": "rack", "burst_prob": 0.8,
+            "mtbf": 200.0}
+    a = to_step_events(spec, 8, seconds_per_step=64.0, max_steps=100,
+                       rng=np.random.default_rng(7), topology=RACKY_TOPO)
+    b = to_step_events(spec, 8, seconds_per_step=64.0, max_steps=100,
+                       rng=np.random.default_rng(7), topology=RACKY_TOPO)
+    assert a == b                       # seed-deterministic
+    assert a, "hot regime must produce events inside the horizon"
+    assert all(0 <= s < 100 for s, _ in a)
+    assert any(len(v) > 1 for _, v in a), "rack kills must batch groups"
+    # victims resolve through the topology: each batch within one rack
+    for _, victims in a:
+        racks = {k for w in victims for k in RACKY_TOPO.racks_of_group(w)}
+        assert len(racks) == 1 or len(victims) == 1
+
+
+def test_to_step_events_open_loop_keeps_groups_dead():
+    evs = to_step_events({"kind": "poisson", "mtbf": 50.0}, 4,
+                         seconds_per_step=64.0, max_steps=500,
+                         rng=np.random.default_rng(0))
+    all_victims = [w for _, v in evs for w in v]
+    assert len(all_victims) == len(set(all_victims)) <= 4
+
+
+# ------------------------------------------------------------------ #
+# the bridge itself                                                  #
+# ------------------------------------------------------------------ #
+def test_bridge_poll_protocol_and_clock():
+    from repro.core import SpareState
+    inj = ScenarioInjector(RACK_BURST, RACKY_TOPO, n_groups=8,
+                           seconds_per_step=100.0, seed=1)
+    st = SpareState(8, 3)
+    events = []
+    for _ in range(30):
+        events += inj.poll(st)
+        for ev in events:
+            for w in ev.victims:
+                st.alive[w] = False     # emulate un-recovered deaths
+    assert inj.clock == pytest.approx(3000.0)
+    assert inj.step == 30
+    assert all(isinstance(e, StepEvent) for e in events)
+    assert inj.events_delivered == len(events)
+    # victims never include already-dead groups and stay in range
+    seen = set()
+    for ev in events:
+        assert not (set(ev.victims) & seen)
+        seen |= set(ev.victims)
+        assert all(0 <= w < 8 for w in ev.victims)
+
+
+def test_bridge_call_flattens_to_plain_injector_protocol():
+    from repro.core import SpareState
+    inj = ScenarioInjector(RACK_BURST, RACKY_TOPO, n_groups=8,
+                           seconds_per_step=500.0, seed=1)
+    st = SpareState(8, 3)
+    for _ in range(20):
+        failed = inj(st)
+        assert isinstance(failed, list)
+        for w in failed:
+            st.alive[w] = False
+        if failed:
+            return
+    pytest.fail("hot regime delivered nothing in 20 windows")
+
+
+def test_bridge_rejects_mismatched_topology():
+    with pytest.raises(ValueError, match="n_groups=16"):
+        ScenarioInjector(RACK_BURST,
+                         ClusterTopology(n_groups=16), n_groups=8)
+    with pytest.raises(ValueError, match="n_groups=8"):
+        to_step_events(RACK_BURST, 4, seconds_per_step=64.0, max_steps=10,
+                       rng=np.random.default_rng(0),
+                       topology=ClusterTopology(n_groups=8))
+
+
+def test_notify_wipeout_rearms_past_the_outage():
+    inj = ScenarioInjector({"kind": "poisson", "mtbf": 100.0},
+                           n_groups=8, seconds_per_step=64.0, seed=0)
+    inj.clock = 640.0
+    inj.notify_wipeout()
+    assert inj.clock == pytest.approx(640.0 + inj.p.t_restart)
+    assert inj._next_fail >= inj.clock
+
+
+# ------------------------------------------------------------------ #
+# trainer under the three PR-2 regimes (acceptance)                  #
+# ------------------------------------------------------------------ #
+def test_trainer_rack_burst_multi_group_kills_and_equivalence():
+    """Rack bursts deliver simultaneous multi-group batches to
+    scheme.recover, and §3.1 holds after every recovery."""
+    tr = _tiny_trainer()
+    inj = ScenarioInjector(RACK_BURST, RACKY_TOPO, n_groups=8,
+                           params=DESParams(n=8, t_comp=64.0), seed=3)
+    rep = tr.run(25, injector=inj, verify_equivalence=True)
+    assert tr.step >= 25
+    assert rep.failures > 0
+    assert rep.multi_group_events >= 1, \
+        "a rack kill must reach recover as one multi-group batch"
+    assert rep.max_grad_check_err < 1e-2
+    assert all(np.isfinite(rep.losses))
+    assert tr.state.prefix_coverage().all()
+    # every multi-group event recorded >= 2 victims in one recover call
+    big = [e for e in rep.events if e.multi_group]
+    assert all(len(e.victims) >= 2 for e in big)
+
+
+@pytest.mark.parametrize("model", [
+    {"kind": "weibull", "mtbf": 400.0},
+    {"kind": "trace", "trace": "meta_hsdp_rackstorm", "time_scale": 0.2},
+], ids=["weibull", "trace_replay"])
+def test_trainer_completes_under_regime(model):
+    tr = _tiny_trainer(n_groups=8, redundancy=3)
+    inj = ScenarioInjector(model, RACKY_TOPO, n_groups=8,
+                           params=DESParams(n=8, t_comp=64.0), seed=11)
+    rep = tr.run(15, injector=inj, verify_equivalence=True)
+    assert tr.step >= 15
+    assert rep.max_grad_check_err < 1e-2
+    assert all(np.isfinite(rep.losses))
+    assert tr.state.prefix_coverage().all()
+
+
+def test_trace_replay_resolves_rack_events_to_batches():
+    tr = _tiny_trainer()
+    # compressed trace: plenty of rack/pod-scope events in the horizon
+    inj = ScenarioInjector({"kind": "trace", "trace":
+                            "meta_hsdp_rackstorm", "time_scale": 0.05},
+                           RACKY_TOPO, n_groups=8,
+                           params=DESParams(n=8, t_comp=64.0), seed=0)
+    rep = tr.run(20, injector=inj)
+    assert rep.multi_group_events >= 1
+    assert tr.step >= 20
+
+
+# ------------------------------------------------------------------ #
+# wipe-out durability (the ckpt-is-None bug)                         #
+# ------------------------------------------------------------------ #
+class _KillAllAt:
+    """Plain injector: kills every group once, at call K."""
+
+    def __init__(self, n: int, at_call: int):
+        self.n = n
+        self.at = at_call
+        self.calls = 0
+
+    def __call__(self, state):
+        self.calls += 1
+        return list(range(self.n)) if self.calls == self.at else []
+
+
+def test_wipeout_without_ckpt_dir_rolls_back_params_and_step():
+    """A wipe-out with no checkpoint directory must roll back to the
+    free in-memory snapshot — the post-rollback loss trajectory replays
+    the clean run exactly (the old code silently kept post-failure
+    params and the step counter)."""
+    clean = _tiny_trainer(n_groups=6, redundancy=2, seed=4)
+    ref = clean.run(5)
+
+    tr = _tiny_trainer(n_groups=6, redundancy=2, seed=4)
+    rep = tr.run(5, injector=_KillAllAt(6, at_call=3),
+                 snapshot_every=100)    # only the run-start snapshot
+    assert rep.wipeouts == 1
+    assert tr.step == 5
+    ev = [e for e in rep.events if e.wipeout][0]
+    assert ev.rollback_depth == 2      # died at step 2, back to step 0
+    assert ev.victims and len(ev.victims) == 6
+    # 2 pre-wipeout steps, then the full 5 replayed from step 0 with
+    # the rolled-back params: trajectories must match bit-for-bit
+    assert rep.losses[:2] == ref.losses[:2]
+    assert rep.losses[2:] == ref.losses
+
+
+def test_wipeout_rollback_respects_snapshot_cadence():
+    clean = _tiny_trainer(n_groups=6, redundancy=2, seed=9)
+    ref = clean.run(8)
+
+    tr = _tiny_trainer(n_groups=6, redundancy=2, seed=9)
+    rep = tr.run(8, injector=_KillAllAt(6, at_call=6), snapshot_every=4)
+    assert rep.wipeouts == 1
+    ev = [e for e in rep.events if e.wipeout][0]
+    assert ev.rollback_depth == 1      # died at step 5, snapshot at 4
+    assert rep.losses[:5] == ref.losses[:5]
+    assert rep.losses[5:] == ref.losses[4:]
