@@ -1,0 +1,119 @@
+"""SPMD gradient-sync benchmark: steps/s and wire bytes, masked vs unmasked.
+
+Runs the real repro.exec mesh step (default: 4 DP groups x TP 2 on 8
+emulated host devices — ``main`` forces the host-platform device count
+to ``n_groups * model_degree`` before the first jax import, which only
+happens inside ``main``) and measures the paper's headline property end
+to end:
+
+* throughput of the healthy schedule vs the same schedule after a
+  masked failure + RECTLR reorder (identical S_A so the executable is
+  shared — masking is weight data, recompiles are impossible);
+* per-step all-reduce count and ring-algorithm wire bytes parsed from
+  the compiled HLO (repro/launch/hlo.py) for both schedules — the
+  zero-extra-collectives claim as numbers, not prose.
+
+Appends one record to ``benchmarks/results/BENCH_spmd_sync.json`` so CI
+runs accumulate a perf trajectory.
+
+Usage:
+  python benchmarks/spmd_sync_bench.py [--steps 8] [--n-groups 4]
+      [--model-degree 2] [--sync shard_map|gspmd] [--arch qwen2.5-3b]
+"""
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def force_device_count(n: int) -> None:
+    """Append the host-platform fan-out to XLA_FLAGS (preserving any
+    flags already set) — must run before the first jax import."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    existing = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in existing:
+        os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
+
+
+def _steps_per_s(executor, steps: int) -> float:
+    from repro.train.trainer import TrainReport
+    report = TrainReport()
+    # warm the executable (the step donates params/opt, so reassign)
+    executor.params, executor.opt_state, _ = executor._dispatch(report)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        executor.params, executor.opt_state, m = executor._dispatch(report)
+    float(m["loss"])                               # block on the result
+    return steps / (time.perf_counter() - t0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--n-groups", type=int, default=4)
+    ap.add_argument("--model-degree", type=int, default=2)
+    ap.add_argument("--sync", default="shard_map",
+                    choices=("shard_map", "gspmd"))
+    ap.add_argument("--out", default=str(RESULTS / "BENCH_spmd_sync.json"))
+    args = ap.parse_args()
+
+    force_device_count(args.n_groups * args.model_degree)
+
+    from repro.configs import smoke_config
+    from repro.core import Rectlr, SpareState
+    from repro.exec import MeshExecutor
+    from repro.launch.hlo import collective_report
+
+    cfg = smoke_config(args.arch).scaled(grad_accum=1)
+    ex = MeshExecutor(cfg, n_groups=args.n_groups, redundancy=2,
+                      model_degree=args.model_degree, sync=args.sync,
+                      seq=32, per_type_batch=2, total_steps=1000)
+
+    # healthy schedule at the post-failure depth, so both measurements
+    # share one executable and differ in weight data only
+    masked = SpareState(args.n_groups, 2)
+    outcome = Rectlr().on_failures(masked, [0])
+    assert not outcome.wipeout
+    healthy = SpareState(args.n_groups, 2)
+    healthy.s_a = masked.s_a
+
+    ex.state = healthy
+    unmasked_sps = _steps_per_s(ex, args.steps)
+    ex.state = masked
+    masked_sps = _steps_per_s(ex, args.steps)
+
+    sync_unmasked = collective_report(ex.compiled_step_text(state=healthy))
+    sync_masked = collective_report(ex.compiled_step_text(state=masked))
+
+    rec = {
+        "bench": "spmd_sync",
+        "arch": args.arch,
+        "mesh": f"{args.n_groups}x{args.model_degree}",
+        "sync": args.sync,
+        "s_a": masked.s_a,
+        "steps": args.steps,
+        "unmasked": {"steps_per_s": round(unmasked_sps, 3),
+                     "collectives": sync_unmasked},
+        "masked": {"steps_per_s": round(masked_sps, 3),
+                   "collectives": sync_masked},
+        "masking_overhead_pct": round(
+            100.0 * (unmasked_sps / max(masked_sps, 1e-9) - 1.0), 2),
+        "extra_collectives": (
+            sync_masked["counts"] != sync_unmasked["counts"]),
+    }
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    history = json.loads(out.read_text()) if out.exists() else []
+    history.append(rec)
+    out.write_text(json.dumps(history, indent=1))
+    print(json.dumps(rec, indent=1))
+    assert not rec["extra_collectives"], \
+        "masked step emitted different collectives than unmasked"
+
+
+if __name__ == "__main__":
+    main()

@@ -15,13 +15,24 @@ device-side SPMD program:
   signal is unbiased.
 """
 from .collectives import (
+    all_reduce_grads,
     compress_grad_int8,
+    constrain_grad,
     decompress_grad_int8,
+    psum_partial,
     weighted_all_reduce,
 )
+from .sharding import batch_spec, cache_specs, opt_specs, param_specs
 
 __all__ = [
+    "all_reduce_grads",
+    "batch_spec",
+    "cache_specs",
     "compress_grad_int8",
+    "constrain_grad",
     "decompress_grad_int8",
+    "opt_specs",
+    "param_specs",
+    "psum_partial",
     "weighted_all_reduce",
 ]

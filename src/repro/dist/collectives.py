@@ -23,13 +23,42 @@ Karimireddy et al. 2019 — EF-SGD).
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["weighted_all_reduce", "compress_grad_int8",
-           "decompress_grad_int8"]
+__all__ = ["weighted_all_reduce", "psum_partial", "all_reduce_grads",
+           "constrain_grad", "compress_grad_int8", "decompress_grad_int8"]
 
-_INT8_MAX = 127.0
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def psum_partial(x: jax.Array, axis_name) -> jax.Array:
+    """``psum`` whose inputs are *partial sums*, with the matching VJP.
+
+    Inside ``shard_map`` each device holds its own partial contribution
+    (a local weighted gradient, a local weighted loss): the derivative of
+    the global sum w.r.t. a device's partial is exactly 1, so the
+    backward pass is the identity. The stock ``lax.psum`` cannot know
+    this — under ``check_rep=False`` its transpose is another ``psum``,
+    which silently multiplies every gradient by the axis size (we
+    measured exactly ``dp_degree``x on the first mesh bring-up). Routing
+    the §3.1 reduction through this wrapper is what lets
+    ``value_and_grad`` of a psummed loss return the correct *local*
+    partial gradient, which is then all-reduced once per step.
+    """
+    return jax.lax.psum(x, axis_name)
+
+
+def _psum_partial_fwd(x, axis_name):
+    return jax.lax.psum(x, axis_name), None
+
+
+def _psum_partial_bwd(axis_name, _res, ct):
+    return (ct,)
+
+
+psum_partial.defvjp(_psum_partial_fwd, _psum_partial_bwd)
 
 
 def weighted_all_reduce(values: jax.Array, weights: jax.Array,
@@ -41,18 +70,57 @@ def weighted_all_reduce(values: jax.Array, weights: jax.Array,
     shape) weighted sum. With ``axis_name`` set, the local partial sum is
     additionally ``psum``-reduced across the named mapped axis — this is
     the production spelling of the §3.1 weighted all-reduce; without it,
-    the call is the exact host-side emulation.
+    the call is the exact host-side emulation. The psum is the
+    partial-sum flavor (:func:`psum_partial`), so differentiating a loss
+    built on this reduction yields each device's own partial gradient —
+    see :func:`all_reduce_grads` for the per-step gradient sync.
     """
     w = weights.reshape(weights.shape + (1,) * (values.ndim - weights.ndim))
     local = jnp.sum(values * w.astype(values.dtype),
                     axis=tuple(range(weights.ndim)))
     if axis_name is not None:
-        local = jax.lax.psum(local, axis_name)
+        local = psum_partial(local, axis_name)
     return local
 
 
+def all_reduce_grads(grads, axis_name: str):
+    """One gradient all-reduce per step: psum every leaf of the (already
+    supplier-weighted) local gradient pytree across the mapped data axis.
+
+    This is the single collective SPARe's failure masking rides on — the
+    weights folded into the per-example loss make the psummed result
+    equal vanilla DP's batch gradient for every survivor set, so masking
+    a failure never changes the collective schedule (paper §3.1, "zero
+    extra collectives").
+    """
+    return jax.tree.map(lambda g: psum_partial(g, axis_name), grads)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def constrain_grad(x: jax.Array, sharding) -> jax.Array:
+    """Identity forward; pins the *cotangent* to ``sharding``.
+
+    Used to force GSPMD to reduce-scatter weight gradients to their
+    shard at the point of production (inside the backward of the layer
+    scan) instead of all-reducing them to replicated form inside the
+    loop.
+    """
+    return x
+
+
+def _constrain_grad_fwd(x, sharding):
+    return x, None
+
+
+def _constrain_grad_bwd(sharding, _res, ct):
+    return (jax.lax.with_sharding_constraint(ct, sharding),)
+
+
+constrain_grad.defvjp(_constrain_grad_fwd, _constrain_grad_bwd)
+
+
 def compress_grad_int8(
-    grad: jax.Array, error: jax.Array
+    grad: jax.Array, error: jax.Array, *, fused: bool | None = None
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Int8 error-feedback quantization of one gradient tensor.
 
@@ -80,15 +148,27 @@ def compress_grad_int8(
     with error feedback the *cumulative* transmitted signal converges to
     the cumulative true gradient, which is what makes aggressive 8-bit
     compression safe for SGD-family optimizers.
+
+    ``fused`` routes through the Pallas quantize-accumulate kernel
+    (:func:`repro.kernels.ops.int8_ef_quantize`): one VMEM pass computes
+    the EF accumulate, the quantization, and the residual together
+    instead of the unfused XLA chain. Defaults to the kernel on TPU and
+    the plain jnp spelling elsewhere; both compute the identical fp32
+    math — ``q`` and ``scale`` bit-identical, the residual up to one
+    fp32 ulp (compiler FMA contraction of ``x - q*scale``; the exact
+    invariant above strictly holds on the op-by-op/eager path).
     """
-    x = grad.astype(jnp.float32) + error.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x)) / _INT8_MAX
-    # all-zero tensors: keep scale 0 (q == 0, decompress == 0) but avoid
-    # the 0/0 in the quantization divide
-    safe = jnp.where(scale > 0, scale, 1.0)
-    q = jnp.clip(jnp.round(x / safe), -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
-    new_error = x - q.astype(jnp.float32) * scale
-    return q, scale, new_error
+    if fused is None:
+        from repro.kernels.ops import on_tpu
+        fused = on_tpu()
+    if fused:
+        from repro.kernels.ops import int8_ef_quantize
+        return int8_ef_quantize(grad, error)
+    # the unfused spelling IS the kernel oracle — one definition of the
+    # accumulate/scale/clip/residual math keeps the bit-identical
+    # contract between the paths from drifting
+    from repro.kernels.ref import int8_ef_ref
+    return int8_ef_ref(grad, error)
 
 
 def decompress_grad_int8(q: jax.Array, scale: jax.Array) -> jax.Array:

@@ -1,0 +1,121 @@
+"""Name-based production sharding rules (FSDP x TP on the launch meshes).
+
+One rule table maps every parameter leaf — identified by its dict key and
+rank — to a :class:`~jax.sharding.PartitionSpec` over the production mesh
+axes from :mod:`repro.launch.mesh` (``(pod,) data, model``):
+
+* **column-parallel** projections (``wq``/``wk``/``wv``, MLP up/gate,
+  MLA down-projections): output features on ``model``, input features
+  FSDP-sharded across the data axes;
+* **row-parallel** projections (``wo``, MLP down): input features on
+  ``model``, output features FSDP across data;
+* **routed experts** (3-D ``w_gate``/``w_up``/``w_down``): expert axis on
+  ``model`` — the EP layout :func:`repro.models.moe.moe_ffn` expects;
+* **vectors** (norm scales, biases, ``a_log``...) and the tiny router:
+  replicated.
+
+The same ``_rule`` feeds two consumers: :func:`param_specs` (the jit
+in/out shardings the dry-run and the mesh executor place parameters
+with) and ``Model._pin_layer_grads`` (per-leaf *gradient* constraints
+via :func:`repro.dist.collectives.constrain_grad`, issued inside the
+layer scan so GSPMD reduce-scatters weight grads to their shard instead
+of all-reducing them replicated).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_specs", "opt_specs", "batch_spec", "cache_specs"]
+
+# output features live on the model axis; input features are FSDP
+_COL_PARALLEL = {"wq", "wk", "wv", "w_in", "w_gate", "w_up",
+                 "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b"}
+# input features live on the model axis; output features are FSDP
+_ROW_PARALLEL = {"wo", "w_down", "w_out"}
+# small / irregular leaves that stay replicated everywhere
+_REPLICATED = {"router", "conv_w", "conv_b", "dt_bias", "a_log",
+               "kv_norm", "q_norm", "ln1", "ln2", "final_norm"}
+
+
+def _rule(name: str | None, ndim: int, dp_axes: tuple[str, ...]):
+    """Spec entries (len ``ndim``) for one *unstacked* parameter leaf."""
+    dp = tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]
+    if ndim < 2 or name in _REPLICATED or name is None:
+        return (None,) * ndim
+    if name == "embed":          # token table: vocab FSDP, features TP
+        return (dp, "model")
+    if name == "lm_head":        # logits want vocab on model
+        return (dp, "model")
+    if name in _COL_PARALLEL:
+        if ndim == 3:            # routed experts (E, d_in, d_out): EP
+            return ("model", None, None)
+        return (None,) * (ndim - 2) + (dp, "model")
+    if name in _ROW_PARALLEL:
+        if ndim == 3:
+            return ("model", None, None)
+        return (None,) * (ndim - 2) + ("model", dp)
+    return (None,) * ndim        # unknown leaf: stay safe, replicate
+
+
+def _leaf_name(path) -> str | None:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return entry.key
+    return None
+
+
+def param_specs(p_shapes, cfg, multi_pod: bool):
+    """PartitionSpec pytree matching ``model.init``'s parameter tree.
+
+    ``p_shapes`` is the ``jax.eval_shape(model.init, ...)`` tree; segment
+    leaves carry the leading layer-stack axis, which always stays
+    unsharded (it is scanned over).
+    """
+    from repro.launch.mesh import dp_axes as _dp
+    dp = _dp(multi_pod)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        stacked = any(isinstance(e, jax.tree_util.DictKey)
+                      and e.key == "segments" for e in path)
+        if stacked:
+            return P(None, *_rule(name, leaf.ndim - 1, dp))
+        return P(*_rule(name, leaf.ndim, dp))
+
+    return jax.tree_util.tree_map_with_path(spec, p_shapes)
+
+
+def opt_specs(opt_shapes, p_spec):
+    """Adam state specs: moments mirror the parameter sharding, the step
+    counter is replicated. ``opt_shapes`` must be the AdamState-like
+    container with ``step``/``mu``/``nu`` fields."""
+    return type(opt_shapes)(step=P(), mu=jax.tree.map(lambda s: s, p_spec),
+                            nu=jax.tree.map(lambda s: s, p_spec))
+
+
+def batch_spec(global_batch: int, mesh, multi_pod: bool):
+    """Spec *entry* for the example axis: the DP axes when the batch
+    divides the DP degree, else ``None`` (replicated small batches,
+    e.g. B=1 long-context serving)."""
+    from repro.launch.mesh import dp_axes as _dp, dp_degree
+    dp = _dp(multi_pod)
+    if global_batch % dp_degree(mesh, multi_pod) != 0:
+        return None
+    return tuple(dp) if len(dp) > 1 else dp[0]
+
+
+def cache_specs(cache_shapes, cfg, mesh, multi_pod: bool):
+    """Decode-cache specs: batch axis (dim 1, after the layer stack) over
+    the DP axes when divisible; everything else replicated."""
+    from repro.launch.mesh import dp_axes as _dp, dp_degree
+    dp = _dp(multi_pod)
+    degree = dp_degree(mesh, multi_pod)
+    dp_entry = tuple(dp) if len(dp) > 1 else dp[0]
+
+    def spec(leaf):
+        if leaf.ndim >= 2 and leaf.shape[1] % degree == 0:
+            return P(None, dp_entry, *(None,) * (leaf.ndim - 2))
+        return P(*(None,) * leaf.ndim)
+
+    return jax.tree.map(spec, cache_shapes)

@@ -14,10 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_pallas
+from .int8_ef import int8_ef_pallas
 from .rmsnorm import rmsnorm_pallas
 from .ssd_scan import ssd_scan_pallas
 
-__all__ = ["flash_attention", "ssd_scan", "rmsnorm", "on_tpu"]
+__all__ = ["flash_attention", "ssd_scan", "rmsnorm", "int8_ef_quantize",
+           "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -46,6 +48,18 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
     a = -jnp.exp(a_log.astype(jnp.float32))
     return ssd_scan_pallas(x, dt[..., None], a, b, c, chunk=chunk,
                            interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def int8_ef_quantize(grad: jax.Array, error: jax.Array, *,
+                     block_rows: int = 256,
+                     interpret: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused int8 EF quantize-accumulate (the compressed-reduce hot path).
+    Returns ``(q int8, scale f32 scalar, new_error f32)``."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return int8_ef_pallas(grad, error, block_rows=block_rows,
+                          interpret=interp)
 
 
 @partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))

@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "ssd_scan_ref", "rmsnorm_ref"]
+__all__ = ["flash_attention_ref", "ssd_scan_ref", "rmsnorm_ref",
+           "int8_ef_ref"]
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -56,6 +57,20 @@ def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
     final, ys = jax.lax.scan(step, state0, jnp.arange(s))
     y = ys.transpose(1, 2, 0, 3)                                  # (B,H,S,P)
     return y.astype(x.dtype), final
+
+
+def int8_ef_ref(grad: jax.Array, error: jax.Array
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Int8 error-feedback quantization, fp32 throughout: the invariant
+    ``q * scale + new_error == grad + error`` holds exactly.
+
+    Returns ``(q int8, scale f32 scalar, new_error f32)``.
+    """
+    x = grad.astype(jnp.float32) + error.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127.0, 127.0).astype(jnp.int8)
+    return q, scale, x - q.astype(jnp.float32) * scale
 
 
 def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:

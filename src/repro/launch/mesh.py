@@ -1,4 +1,4 @@
-"""Production mesh builders.
+"""Production + emulated mesh builders.
 
 Defined as FUNCTIONS (never module-level constants) so importing this
 module touches no jax device state — the dry-run sets
@@ -13,20 +13,63 @@ The SPARe data-parallel groups are the ``pod x data`` slices (N = 32 DP
 groups of M = 16 model-sharded chips on the multi-pod mesh); the ``pod``
 axis crosses the DCI boundary, which is exactly the axis the SPARe
 failure-masking weights neutralize when a whole slice drops out.
+
+:func:`make_emulated_mesh` builds the same ``(data, model)`` topology
+from however many devices the host platform exposes — the
+``repro.exec`` SPMD tests and benchmarks run the real sharded step on
+any machine via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 
-__all__ = ["make_production_mesh", "dp_axes", "dp_degree"]
+__all__ = ["make_production_mesh", "make_emulated_mesh", "dp_axes",
+           "dp_degree"]
+
+
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer releases; explicit
+    Auto types match the old default, so fall back silently."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:        # make_mesh predates axis_types
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
+
+
+def make_emulated_mesh(data_degree: int,
+                       model_degree: int = 1) -> jax.sharding.Mesh:
+    """``(data, model)`` mesh over the first ``data*model`` local devices.
+
+    On a CPU container, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<n>`` *before the
+    first jax import* to fan one host out into ``n`` emulated devices —
+    the same SPMD partitioner, collectives, and HLO the production mesh
+    sees, at laptop scale.
+    """
+    need = data_degree * model_degree
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh ({data_degree}, {model_degree}) needs {need} devices "
+            f"but only {have} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before the "
+            f"first jax import (see README §repro.exec)")
+    devices = np.asarray(jax.devices()[:need]).reshape(
+        data_degree, model_degree)
+    return jax.sharding.Mesh(devices, ("data", "model"))
 
 
 def dp_axes(multi_pod: bool) -> tuple[str, ...]:

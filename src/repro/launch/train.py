@@ -22,11 +22,21 @@ Failure injection comes in two flavors:
 preset instead: the tiny-config trainer across the three PR-2 regimes
 (weibull / rack-burst / trace replay), verifying the §3.1 gradient
 invariant after every recovery.
+
+``--mesh`` swaps the emulated trainer for the :class:`repro.exec
+.MeshExecutor`: the identical loop (same schemes, same injectors, same
+report) but the step runs sharded over an ``n_groups x model_degree``
+device mesh with the §3.1 weighted all-reduce on the wire. On a CPU
+container the launcher forces the host platform to fan out into enough
+emulated devices automatically (the dry-run trick), so
+``python -m repro.launch.train --arch qwen2.5-3b --mesh`` works
+anywhere.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -108,6 +118,18 @@ def main() -> None:
                          "three PR-2 failure regimes and exit; honors "
                          "--steps/--n-groups/-r/--seed/--topology/"
                          "--seconds-per-step, ignores the other flags")
+    ap.add_argument("--mesh", action="store_true",
+                    help="run on a real SPMD device mesh (repro.exec."
+                         "MeshExecutor) instead of the emulated trainer; "
+                         "forces --xla_force_host_platform_device_count "
+                         "when too few devices are visible")
+    ap.add_argument("--model-degree", type=int, default=1,
+                    help="tensor-parallel degree of the --mesh mesh")
+    ap.add_argument("--sync", default="shard_map",
+                    choices=("shard_map", "gspmd"),
+                    help="--mesh gradient-sync spelling: explicit psum "
+                         "under shard_map, or GSPMD NamedShardings with "
+                         "params sharded on the model axis")
     ap.add_argument("--scheme", default="spare",
                     help="fault-tolerance scheme (repro.des registry: "
                          "spare | replication | ckpt_only | adaptive)")
@@ -124,6 +146,18 @@ def main() -> None:
     if args.arch is None:
         ap.error("--arch is required (unless --sweep-regimes)")
 
+    if args.mesh:
+        # must land before the FIRST jax import (jax locks the device
+        # count on init); every repro import below is function-local so
+        # this is still early enough. Append rather than setdefault —
+        # unrelated pre-set XLA_FLAGS must not silently disable the
+        # fan-out (an explicit user-set device count still wins).
+        existing = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in existing:
+            flag = ("--xla_force_host_platform_device_count="
+                    f"{args.n_groups * args.model_degree}")
+            os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
+
     from repro.configs import get_config, smoke_config
     from repro.des import get_scheme
     from repro.train.trainer import PoissonInjector, SpareTrainer
@@ -131,16 +165,24 @@ def main() -> None:
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.scaled(grad_accum=1)
     r = _resolve_r(args)
+    plane = (f"{args.n_groups}x{args.model_degree}/{args.sync}"
+             if args.mesh else "emulated")
     print(f"[train] arch={args.arch} N={args.n_groups} r={r} "
-          f"scheme={args.scheme} steps={args.steps} "
+          f"scheme={args.scheme} steps={args.steps} mesh={plane} "
           f"params={cfg.param_count():,}")
 
     scheme_kwargs = {} if args.scheme == "ckpt_only" else {"r": r}
-    trainer = SpareTrainer(cfg, n_groups=args.n_groups, redundancy=r,
-                           seq=args.seq, per_type_batch=args.per_type_batch,
-                           seed=args.seed, ckpt_dir=args.ckpt_dir,
-                           base_lr=args.lr, total_steps=args.steps,
-                           scheme=get_scheme(args.scheme, **scheme_kwargs))
+    common = dict(n_groups=args.n_groups, redundancy=r, seq=args.seq,
+                  per_type_batch=args.per_type_batch, seed=args.seed,
+                  ckpt_dir=args.ckpt_dir, base_lr=args.lr,
+                  total_steps=args.steps,
+                  scheme=get_scheme(args.scheme, **scheme_kwargs))
+    if args.mesh:
+        from repro.exec import MeshExecutor
+        trainer = MeshExecutor(cfg, model_degree=args.model_degree,
+                               sync=args.sync, **common)
+    else:
+        trainer = SpareTrainer(cfg, **common)
     if args.failure_model is not None:
         from repro.train.injection import ScenarioInjector
         injector = ScenarioInjector(

@@ -25,11 +25,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.dist.collectives import weighted_all_reduce
+from repro.dist.collectives import all_reduce_grads, weighted_all_reduce
 from repro.models.model import Model
 from repro.optim import adamw_update, cosine_lr
 
-__all__ = ["weighted_loss", "make_train_step", "make_serve_step"]
+__all__ = ["weighted_loss", "make_train_step", "make_serve_step",
+           "make_prefill"]
 
 
 def weighted_loss(model: Model, params: Any, micro: dict,
@@ -59,7 +60,7 @@ def weighted_loss(model: Model, params: Any, micro: dict,
 def make_train_step(model: Model, *, base_lr: float = 3e-4,
                     warmup: int = 100, total_steps: int = 10_000,
                     weight_decay: float = 0.1, clip_norm: float = 1.0,
-                    grad_shardings=None):
+                    grad_shardings=None, axis_name: str | None = None):
     """Build the pure train_step; caller jits with shardings.
 
     ``grad_shardings`` (pytree of NamedSharding matching params) pins the
@@ -67,10 +68,18 @@ def make_train_step(model: Model, *, base_lr: float = 3e-4,
     replicates the fp32 accumulator and all-reduces the *full* gradient
     every microbatch (measured +300 GiB/step of all-reduce on a 3B model);
     with it the backward lowers to reduce-scatters into the shard.
+
+    ``axis_name`` is the ``shard_map`` spelling (the mesh executor):
+    each device computes its *local* supplier-weighted partial gradient
+    over its slice of the stacked batch, and the accumulated partials
+    are psummed ONCE per step after the microbatch scan — the §3.1
+    weighted all-reduce. Because the masking weights ride in the batch,
+    a failure re-weight changes neither the program nor its collectives.
     """
 
     def micro_grads(params, micro):
-        return jax.value_and_grad(partial(weighted_loss, model))(params, micro)
+        return jax.value_and_grad(partial(weighted_loss, model))(
+            params, micro, axis_name=axis_name)
 
     acc_dtype = jnp.dtype(model.cfg.grad_accum_dtype)
 
@@ -97,6 +106,10 @@ def make_train_step(model: Model, *, base_lr: float = 3e-4,
 
         (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), zero),
                                         batch)
+        if axis_name is not None:
+            # the one gradient sync of the step: sum the accumulated
+            # (already supplier-weighted) partials across the data axis
+            grads = all_reduce_grads(grads, axis_name)
         # step+1: opt.step counts *completed* updates; lr(0)=0 would make
         # the first update a silent no-op
         lr = cosine_lr(opt_state.step + 1, base_lr, warmup, total_steps)

@@ -328,15 +328,10 @@ class SpareTrainer:
         schedule vs the vanilla-DP oracle — ``max |g_spare - g_vanilla|
         / max(max |g_vanilla|, 1)``. Zero for a healthy system; fp32
         summation-order noise only after any successful recovery."""
-        ref = self.vanilla_reference_grads(step)
-        got = self.spare_grads(step)
-        diff = jax.tree.reduce(max, jax.tree.map(
-            lambda a, b: float(jnp.abs(a.astype(jnp.float32)
-                                       - b.astype(jnp.float32)).max()),
-            ref, got))
-        scale = jax.tree.reduce(max, jax.tree.map(
-            lambda a: float(jnp.abs(a.astype(jnp.float32)).max()), ref))
-        return diff / max(scale, 1.0)
+        # lazy: repro.exec pulls in this module at import time
+        from repro.exec.equivalence import tree_max_rel_err
+        return tree_max_rel_err(self.spare_grads(step),
+                                self.vanilla_reference_grads(step))
 
     def spare_grads(self, step: int | None = None):
         """Gradient under the *current* (possibly failed/reordered)

@@ -1,0 +1,96 @@
+"""Fused int8-EF Pallas kernel vs reference + unfused collectives path.
+
+Unlike the other kernel tests (tpu-marked), these run in tier-1 on the
+CPU wheel: the kernel body executes in interpret mode, and its contract
+is checked against the *jitted* :func:`repro.kernels.ref.int8_ef_ref` —
+payload and scale bit-identical, residual within one fp32 ulp of the
+dequantized value (compiler FMA contraction; see the kernel docstring).
+The reference must go through the same compilation pipeline as the
+kernel: XLA:CPU's default fast-math rewrites the ``/127`` scale divide
+into a reciprocal multiply, so eager-vs-jitted differ by an ulp of
+scale regardless of the kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.collectives import compress_grad_int8, decompress_grad_int8
+from repro.kernels.ops import int8_ef_quantize
+from repro.kernels.ref import int8_ef_ref
+
+RNG = np.random.default_rng(7)
+
+SHAPES_DTYPES = [
+    ((33, 70), jnp.float32),       # ragged 2-D, needs padding
+    ((4096,), jnp.float32),        # exactly one (32, 128) multiple
+    ((5000,), jnp.bfloat16),       # low-precision grads, ragged
+    ((2, 3, 129), jnp.float16),    # odd trailing dim
+    ((1,), jnp.float32),           # single element
+]
+
+
+def _ulp_bound(x):
+    """One ulp at the magnitude of the largest dequantized value."""
+    return float(jnp.max(jnp.abs(x))) * 1.5e-7 + 1e-30
+
+
+@pytest.mark.parametrize("shape,dtype", SHAPES_DTYPES)
+def test_kernel_matches_reference(shape, dtype):
+    g = jnp.asarray(RNG.normal(size=shape), dtype)
+    e = jnp.asarray(RNG.normal(size=shape) * 0.01, jnp.float32)
+    qk, sk, ek = int8_ef_quantize(g, e, interpret=True)
+    qr, sr, er = jax.jit(int8_ef_ref)(g, e)
+    assert qk.dtype == jnp.int8 and qk.shape == shape
+    assert ek.dtype == jnp.float32 and ek.shape == shape
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    assert float(sk) == float(sr)
+    x = g.astype(jnp.float32) + e
+    np.testing.assert_allclose(np.asarray(ek), np.asarray(er),
+                               atol=_ulp_bound(x), rtol=0)
+
+
+@pytest.mark.parametrize("shape,dtype", SHAPES_DTYPES)
+def test_ef_invariant_through_kernel(shape, dtype):
+    """restored + new_error == grad + error, to one fp32 ulp."""
+    g = jnp.asarray(RNG.normal(size=shape), dtype)
+    e = jnp.asarray(RNG.normal(size=shape) * 0.01, jnp.float32)
+    q, s, err = int8_ef_quantize(g, e, interpret=True)
+    x = g.astype(jnp.float32) + e
+    restored = decompress_grad_int8(q, s)
+    np.testing.assert_allclose(np.asarray(restored + err), np.asarray(x),
+                               atol=_ulp_bound(x), rtol=0)
+
+
+def test_kernel_matches_unfused_collectives_path():
+    g = jnp.asarray(RNG.normal(size=(700,)), jnp.float32)
+    e = jnp.asarray(RNG.normal(size=(700,)) * 0.01, jnp.float32)
+    qk, sk, ek = compress_grad_int8(g, e, fused=True)    # kernel (interp)
+    qu, su, eu = jax.jit(
+        lambda a, b: compress_grad_int8(a, b, fused=False))(g, e)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qu))
+    assert float(sk) == float(su)
+    np.testing.assert_allclose(np.asarray(ek), np.asarray(eu),
+                               atol=_ulp_bound(g + e), rtol=0)
+
+
+def test_all_zero_tensor_safe():
+    z = jnp.zeros((300,), jnp.float32)
+    q, s, err = int8_ef_quantize(z, z, interpret=True)
+    assert float(s) == 0.0
+    assert not np.asarray(q).any()
+    assert not np.asarray(err).any()
+
+
+def test_error_feedback_converges_over_steps():
+    """Cumulative transmitted signal tracks the cumulative gradient —
+    the property that makes 8-bit compression safe for training."""
+    g = jnp.asarray(RNG.normal(size=(512,)), jnp.float32)
+    err = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for _ in range(20):
+        q, s, err = int8_ef_quantize(g, err, interpret=True)
+        sent = sent + decompress_grad_int8(q, s)
+    # after k steps: |k*g - sent| == |final residual| <= scale/2 + ulps
+    resid = np.abs(np.asarray(20.0 * g - sent))
+    assert resid.max() <= float(s) / 2 + 1e-4
