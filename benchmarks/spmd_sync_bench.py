@@ -9,16 +9,23 @@ to end:
 * throughput of the healthy schedule vs the same schedule after a
   masked failure + RECTLR reorder (identical S_A so the executable is
   shared — masking is weight data, recompiles are impossible);
-* per-step all-reduce count and ring-algorithm wire bytes parsed from
+* per-step collective count and ring-algorithm wire bytes parsed from
   the compiled HLO (repro/launch/hlo.py) for both schedules — the
-  zero-extra-collectives claim as numbers, not prose.
+  zero-extra-collectives claim as numbers, not prose;
+* with ``--grad-compress int8_ef``: the same two schedules through the
+  compressed bucketed sync, plus the wire-byte ratio against an
+  uncompressed executor's step at the same S_A — the ~4x traffic-drop
+  claim as numbers (``--assert-min-ratio 3.5`` is the CI gate).
 
-Appends one record to ``benchmarks/results/BENCH_spmd_sync.json`` so CI
-runs accumulate a perf trajectory.
+Appends one record per invocation to ``BENCH_spmd_sync.json`` at the
+repo root so CI runs accumulate a perf trajectory across all sync
+modes (shard_map, gspmd, shard_map+int8_ef).
 
 Usage:
   python benchmarks/spmd_sync_bench.py [--steps 8] [--n-groups 4]
-      [--model-degree 2] [--sync shard_map|gspmd] [--arch qwen2.5-3b]
+      [--model-degree 2] [--sync shard_map|gspmd]
+      [--grad-compress none|int8_ef] [--assert-min-ratio 3.5]
+      [--arch qwen2.5-3b]
 """
 import argparse
 import json
@@ -26,7 +33,7 @@ import os
 import time
 from pathlib import Path
 
-RESULTS = Path(__file__).resolve().parent / "results"
+ROOT = Path(__file__).resolve().parents[1]
 
 
 def force_device_count(n: int) -> None:
@@ -41,11 +48,15 @@ def force_device_count(n: int) -> None:
 def _steps_per_s(executor, steps: int) -> float:
     from repro.train.trainer import TrainReport
     report = TrainReport()
-    # warm the executable (the step donates params/opt, so reassign)
+    # warm the executable (the step donates params/opt, so reassign);
+    # advancing executor.step keeps the prefetch key matching, so the
+    # measurement exercises the real double-buffered feeding path
     executor.params, executor.opt_state, _ = executor._dispatch(report)
+    executor.step += 1
     t0 = time.perf_counter()
     for _ in range(steps):
         executor.params, executor.opt_state, m = executor._dispatch(report)
+        executor.step += 1
     float(m["loss"])                               # block on the result
     return steps / (time.perf_counter() - t0)
 
@@ -58,7 +69,15 @@ def main() -> None:
     ap.add_argument("--model-degree", type=int, default=2)
     ap.add_argument("--sync", default="shard_map",
                     choices=("shard_map", "gspmd"))
-    ap.add_argument("--out", default=str(RESULTS / "BENCH_spmd_sync.json"))
+    ap.add_argument("--grad-compress", default="none",
+                    choices=("none", "int8_ef"),
+                    help="int8_ef runs the two-phase compressed bucketed "
+                         "sync (shard_map only) and reports the wire-byte "
+                         "ratio vs the uncompressed step")
+    ap.add_argument("--assert-min-ratio", type=float, default=None,
+                    help="fail unless baseline/compressed gradient-sync "
+                         "wire bytes >= this factor (e.g. 3.5)")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_spmd_sync.json"))
     args = ap.parse_args()
 
     force_device_count(args.n_groups * args.model_degree)
@@ -66,11 +85,13 @@ def main() -> None:
     from repro.configs import smoke_config
     from repro.core import Rectlr, SpareState
     from repro.exec import MeshExecutor
-    from repro.launch.hlo import collective_report
+    from repro.launch.hlo import collective_report, wire_byte_ratio
 
+    compress = None if args.grad_compress == "none" else args.grad_compress
     cfg = smoke_config(args.arch).scaled(grad_accum=1)
     ex = MeshExecutor(cfg, n_groups=args.n_groups, redundancy=2,
                       model_degree=args.model_degree, sync=args.sync,
+                      grad_compress=compress,
                       seq=32, per_type_batch=2, total_steps=1000)
 
     # healthy schedule at the post-failure depth, so both measurements
@@ -86,14 +107,18 @@ def main() -> None:
     ex.state = masked
     masked_sps = _steps_per_s(ex, args.steps)
 
-    sync_unmasked = collective_report(ex.compiled_step_text(state=healthy))
+    text_unmasked = ex.compiled_step_text(state=healthy)
+    sync_unmasked = collective_report(text_unmasked)
     sync_masked = collective_report(ex.compiled_step_text(state=masked))
 
+    mode = args.sync if compress is None else f"{args.sync}+{compress}"
     rec = {
         "bench": "spmd_sync",
         "arch": args.arch,
         "mesh": f"{args.n_groups}x{args.model_degree}",
         "sync": args.sync,
+        "grad_compress": args.grad_compress,
+        "mode": mode,
         "s_a": masked.s_a,
         "steps": args.steps,
         "unmasked": {"steps_per_s": round(unmasked_sps, 3),
@@ -105,6 +130,18 @@ def main() -> None:
         "extra_collectives": (
             sync_masked["counts"] != sync_unmasked["counts"]),
     }
+
+    if compress is not None:
+        # the ~4x claim: same arch/mesh/S_A, fp32 buckets on the wire
+        base = MeshExecutor(cfg, n_groups=args.n_groups, redundancy=2,
+                            model_degree=args.model_degree, sync=args.sync,
+                            seq=32, per_type_batch=2, total_steps=1000)
+        base.state = healthy
+        ratio = wire_byte_ratio(text_unmasked,
+                                base.compiled_step_text(state=healthy))
+        rec["wire_bytes_vs_fp32"] = round(ratio, 4)
+        rec["wire_reduction_x"] = round(1.0 / max(ratio, 1e-30), 2)
+
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     history = json.loads(out.read_text()) if out.exists() else []
@@ -113,6 +150,12 @@ def main() -> None:
     print(json.dumps(rec, indent=1))
     assert not rec["extra_collectives"], \
         "masked step emitted different collectives than unmasked"
+    if args.assert_min_ratio is not None:
+        assert compress is not None, \
+            "--assert-min-ratio needs --grad-compress int8_ef"
+        assert rec["wire_reduction_x"] >= args.assert_min_ratio, (
+            f"compressed sync only cut wire bytes "
+            f"{rec['wire_reduction_x']}x (< {args.assert_min_ratio}x)")
 
 
 if __name__ == "__main__":

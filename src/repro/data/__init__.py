@@ -1,3 +1,3 @@
-from .pipeline import ShardedTokenPipeline, spare_batch
+from .pipeline import ShardedTokenPipeline, spare_batch, spare_batch_rows
 
-__all__ = ["ShardedTokenPipeline", "spare_batch"]
+__all__ = ["ShardedTokenPipeline", "spare_batch", "spare_batch_rows"]

@@ -15,24 +15,38 @@ device-side SPMD program:
   signal is unbiased.
 """
 from .collectives import (
+    BucketedAllReduce,
+    BucketLayout,
+    CompressedBucketSync,
     all_reduce_grads,
+    bucket_layout,
     compress_grad_int8,
     constrain_grad,
     decompress_grad_int8,
+    flatten_grads,
     psum_partial,
+    shard_map_compat,
+    unflatten_grads,
     weighted_all_reduce,
 )
 from .sharding import batch_spec, cache_specs, opt_specs, param_specs
 
 __all__ = [
+    "BucketedAllReduce",
+    "BucketLayout",
+    "CompressedBucketSync",
     "all_reduce_grads",
     "batch_spec",
+    "bucket_layout",
     "cache_specs",
     "compress_grad_int8",
     "constrain_grad",
     "decompress_grad_int8",
+    "flatten_grads",
     "opt_specs",
     "param_specs",
     "psum_partial",
+    "shard_map_compat",
+    "unflatten_grads",
     "weighted_all_reduce",
 ]

@@ -23,13 +23,42 @@ Karimireddy et al. 2019 — EF-SGD).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = ["weighted_all_reduce", "psum_partial", "all_reduce_grads",
-           "constrain_grad", "compress_grad_int8", "decompress_grad_int8"]
+           "constrain_grad", "compress_grad_int8", "decompress_grad_int8",
+           "BucketLayout", "bucket_layout", "flatten_grads",
+           "unflatten_grads", "BucketedAllReduce", "CompressedBucketSync",
+           "shard_map_compat"]
+
+try:  # moved to jax.shard_map in newer releases
+    from jax.experimental.shard_map import shard_map as _shard_map_raw
+except ImportError:  # pragma: no cover - future jax
+    _shard_map_raw = jax.shard_map
+
+
+def shard_map_compat(fn, *, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions, replication checking off.
+
+    Two renames straddle the pinned toolchain: the function moved from
+    ``jax.experimental.shard_map`` to ``jax.shard_map``, and the
+    replication-checker flag from ``check_rep`` to ``check_vma``. Every
+    manual program in the repo (the mesh executor's step, the MoE
+    expert-parallel ffn) declares replicated out_specs the checker
+    cannot prove through psum/custom_vjp, so it is disabled under
+    whichever name exists.
+    """
+    try:
+        return _shard_map_raw(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+    except TypeError:  # pragma: no cover - newer jax
+        return _shard_map_raw(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1,))
@@ -174,3 +203,230 @@ def compress_grad_int8(
 def decompress_grad_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     """Inverse of :func:`compress_grad_int8`: ``q * scale`` in fp32."""
     return q.astype(jnp.float32) * scale
+
+
+# --------------------------------------------------------------------- #
+# bucketed flat gradient sync                                           #
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class BucketLayout:
+    """Deterministic flat-bucket layout of a gradient pytree.
+
+    Leaves (in ``jax.tree`` order) are packed first-fit-in-order into
+    contiguous fp32 buckets capped at ``max_bucket_elems`` (a leaf larger
+    than the cap gets a bucket of its own), and every bucket is
+    zero-padded up to a multiple of ``pad_to`` (the data-parallel chunk
+    granularity of the compressed sync). The layout is a pure function of
+    (tree structure, leaf shapes, cap, pad) — compress and decompress
+    sides derive byte-identical placement with no coordination.
+    """
+
+    treedef: object
+    shapes: tuple[tuple[int, ...], ...]    # per leaf
+    dtypes: tuple[str, ...]                # per leaf (original dtype name)
+    bucket_of: tuple[int, ...]             # leaf -> bucket index
+    offsets: tuple[int, ...]               # leaf -> element offset in bucket
+    bucket_sizes: tuple[int, ...]          # padded element counts
+    pad_to: int
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    @property
+    def n_elems(self) -> int:
+        return sum(self.bucket_sizes)
+
+
+def bucket_layout(tree, *, max_bucket_elems: int = 1 << 23,
+                  pad_to: int = 1) -> BucketLayout:
+    """Pack ``tree``'s leaves (arrays or ShapeDtypeStructs) into buckets."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes, dtypes, bucket_of, offsets = [], [], [], []
+    sizes: list[int] = []          # unpadded fill of each open bucket
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
+        shapes.append(tuple(leaf.shape))
+        dtypes.append(jnp.dtype(leaf.dtype).name)
+        if not sizes or sizes[-1] + n > max_bucket_elems and sizes[-1] > 0:
+            sizes.append(0)
+        bucket_of.append(len(sizes) - 1)
+        offsets.append(sizes[-1])
+        sizes[-1] += n
+    padded = tuple(-(-s // pad_to) * pad_to for s in sizes)
+    return BucketLayout(treedef=treedef, shapes=tuple(shapes),
+                        dtypes=tuple(dtypes), bucket_of=tuple(bucket_of),
+                        offsets=tuple(offsets), bucket_sizes=padded,
+                        pad_to=pad_to)
+
+
+def flatten_grads(layout: BucketLayout, tree) -> list[jax.Array]:
+    """Pytree -> list of contiguous fp32 1-D buckets (zero-padded)."""
+    leaves = layout.treedef.flatten_up_to(tree)
+    parts: list[list[jax.Array]] = [[] for _ in layout.bucket_sizes]
+    fill = [0] * layout.n_buckets
+    for i, leaf in enumerate(leaves):
+        b = layout.bucket_of[i]
+        parts[b].append(leaf.astype(jnp.float32).reshape(-1))
+        fill[b] += parts[b][-1].size
+    bufs = []
+    for b, chunks in enumerate(parts):
+        buf = jnp.concatenate(chunks) if len(chunks) > 1 else chunks[0]
+        pad = layout.bucket_sizes[b] - fill[b]
+        if pad:
+            buf = jnp.pad(buf, (0, pad))
+        bufs.append(buf)
+    return bufs
+
+
+def unflatten_grads(layout: BucketLayout, bufs) -> object:
+    """Inverse of :func:`flatten_grads`; bit-transparent round trip.
+
+    fp32 leaves come back untouched; bf16/fp16 leaves round-trip exactly
+    because widening to fp32 is lossless and the cast back merely undoes
+    it (the uncompressed bucketed psum adds device partials in fp32 — the
+    same element order and width the per-leaf psum used).
+    """
+    leaves = []
+    for i, shape in enumerate(layout.shapes):
+        b, off = layout.bucket_of[i], layout.offsets[i]
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        leaf = jax.lax.slice(bufs[b], (off,), (off + n,)).reshape(shape)
+        leaves.append(leaf.astype(layout.dtypes[i]))
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+class BucketedAllReduce:
+    """O(1)-collective gradient sync: psum a handful of flat buckets.
+
+    Replaces the one-``psum``-per-parameter-leaf spelling of
+    :func:`all_reduce_grads` inside ``shard_map``: the gradient pytree is
+    flattened through a :class:`BucketLayout` (a fixed, small number of
+    size-capped fp32 buffers), each bucket is psummed once, and the tree
+    is rebuilt bit-transparently. Collective count per step is
+    ``layout.n_buckets`` regardless of how many hundred leaves the model
+    has; numerics are element-for-element identical to the per-leaf psum
+    (same adds, same order, same fp32 width).
+    """
+
+    stateful = False
+
+    def __init__(self, layout: BucketLayout, axis_name: str):
+        self.layout = layout
+        self.axis_name = axis_name
+
+    def __call__(self, grads):
+        bufs = flatten_grads(self.layout, grads)
+        bufs = [psum_partial(b, self.axis_name) for b in bufs]
+        return unflatten_grads(self.layout, bufs)
+
+
+class CompressedBucketSync:
+    """Two-phase int8 error-feedback all-reduce over flat buckets.
+
+    The wire protocol (per bucket of ``B`` fp32 elements, data-parallel
+    degree ``dp``), all arithmetic fp32 — int8 payloads are *gathered*
+    and dequant-accumulated, never int-psummed, so there is no overflow
+    at any ``dp``:
+
+    1. quantize the local partial bucket (+ stage-1 EF residual) to int8
+       with one fp32 scale per (device, bucket);
+    2. ``all_to_all`` the int8 payload: device ``i`` receives every
+       device's quantized partial of chunk ``i`` (``B`` int8 wire bytes),
+       plus an ``all_gather`` of the ``dp`` fp32 scales;
+    3. dequant-accumulate the chunk in fp32 — device ``i`` now owns the
+       exact (up to stage-1 quantization) reduced chunk ``i``;
+    4. re-quantize the reduced chunk (+ stage-2 EF residual, owned by
+       the same device every step) and ``all_gather`` int8 chunks +
+       scales back to everyone (``B`` int8 wire bytes);
+    5. dequantize locally into the full reduced bucket.
+
+    Wire bytes ~= ``2B`` vs the fp32 ring all-reduce's ``8B`` — the ~4x
+    reduction gated by ``launch/hlo.py`` — and the collective *count* is
+    a constant 4 per bucket, independent of the survivor set (masking
+    stays weight data; the schedule is byte-identical masked vs
+    unmasked). Both EF residuals are device-local sharded state
+    (flat arrays split over the data axis) threaded through the train
+    step; the cumulative transmitted gradient stays unbiased through
+    both quantizations (Seide et al. 2014; Tang et al. 2019 — the
+    1-bit-Adam-style two-stage EF).
+    """
+
+    stateful = True
+
+    def __init__(self, layout: BucketLayout, dp_degree: int,
+                 axis_name: str, *, fused: bool | None = None):
+        for b, size in enumerate(layout.bucket_sizes):
+            if size % dp_degree:
+                raise ValueError(
+                    f"bucket {b} has {size} elements, not divisible by "
+                    f"dp_degree={dp_degree}; build the layout with "
+                    f"pad_to={dp_degree} (or a multiple)")
+        self.layout = layout
+        self.dp = dp_degree
+        self.axis_name = axis_name
+        self.fused = fused
+
+    # -- EF state plumbing (global view, host side) ------------------- #
+    def init_state(self):
+        """Zero EF residuals, *global* shapes: ``err1[b]`` is every
+        device's stage-1 residual for bucket ``b`` laid out flat
+        (``dp * B`` fp32, device-sharded), ``err2[b]`` the chunk-owner
+        stage-2 residual (``B`` fp32, device-sharded)."""
+        return {
+            "err1": tuple(np.zeros(self.dp * s, np.float32)
+                          for s in self.layout.bucket_sizes),
+            "err2": tuple(np.zeros(s, np.float32)
+                          for s in self.layout.bucket_sizes),
+        }
+
+    def state_specs(self):
+        """PartitionSpecs matching :meth:`init_state` (both residual
+        families shard flat over the data axis — pure device-local
+        state, no cross-device meaning)."""
+        from jax.sharding import PartitionSpec as P
+        spec = P(self.axis_name)
+        return {"err1": tuple(spec for _ in self.layout.bucket_sizes),
+                "err2": tuple(spec for _ in self.layout.bucket_sizes)}
+
+    # -- the sync itself (device side, inside shard_map) -------------- #
+    def _sync_bucket(self, buf, e1, e2):
+        q1, s1, e1_new = compress_grad_int8(buf, e1, fused=self.fused)
+        # ship everyone's partial of my chunk; scales ride separately
+        mine = jax.lax.all_to_all(q1.reshape(self.dp, -1),
+                                  self.axis_name, 0, 0)       # (dp, B/dp)
+        scales = jax.lax.all_gather(s1, self.axis_name)       # (dp,)
+        chunk = jnp.einsum("j,jk->k", scales,
+                           mine.astype(jnp.float32))          # fp32 sum
+        q2, s2, e2_new = compress_grad_int8(chunk, e2, fused=self.fused)
+        full_q = jax.lax.all_gather(q2, self.axis_name)       # (dp, B/dp)
+        full_s = jax.lax.all_gather(s2, self.axis_name)       # (dp,)
+        out = (full_q.astype(jnp.float32) * full_s[:, None]).reshape(-1)
+        return out, e1_new, e2_new
+
+    def __call__(self, grads, state):
+        """Local (per-device) view: ``state['err1'][b]`` is this
+        device's full-bucket residual, ``state['err2'][b]`` its owned
+        chunk's. Returns (reduced grads pytree, new state)."""
+        bufs = flatten_grads(self.layout, grads)
+        out, ne1, ne2 = [], [], []
+        for buf, e1, e2 in zip(bufs, state["err1"], state["err2"]):
+            full, e1n, e2n = self._sync_bucket(buf, e1, e2)
+            out.append(full)
+            ne1.append(e1n)
+            ne2.append(e2n)
+        return (unflatten_grads(self.layout, out),
+                {"err1": tuple(ne1), "err2": tuple(ne2)})
+
+    def sync_once(self, grads):
+        """Stateless spelling (zero residuals) for verification paths —
+        single-step quantization error only, bounded by the §3.1
+        quantization-tolerance oracle in ``exec/equivalence.py``."""
+        zeros = {
+            "err1": tuple(jnp.zeros(s, jnp.float32)
+                          for s in self.layout.bucket_sizes),
+            "err2": tuple(jnp.zeros(s // self.dp, jnp.float32)
+                          for s in self.layout.bucket_sizes),
+        }
+        reduced, _ = self(grads, zeros)
+        return reduced

@@ -11,6 +11,7 @@ zero recompiles per survivor set. Works on any machine via
 """
 from .equivalence import (
     SurvivorCheck,
+    int8_sweep_tolerance,
     recoverable_failure_sets,
     survivor_set_sweep,
     tree_max_rel_err,
@@ -21,6 +22,7 @@ __all__ = [
     "MeshExecutor",
     "SurvivorCheck",
     "executor_param_specs",
+    "int8_sweep_tolerance",
     "recoverable_failure_sets",
     "survivor_set_sweep",
     "tree_max_rel_err",

@@ -22,7 +22,28 @@ import numpy as np
 from repro.core import Rectlr, SpareState
 
 __all__ = ["SurvivorCheck", "recoverable_failure_sets",
-           "tree_max_rel_err", "survivor_set_sweep"]
+           "tree_max_rel_err", "survivor_set_sweep",
+           "int8_sweep_tolerance"]
+
+
+def int8_sweep_tolerance(dp_degree: int, kappa: float = 4.0) -> float:
+    """Quantization-tolerance oracle for the §3.1 sweep under
+    ``grad_compress="int8_ef"``.
+
+    With zero EF residuals (the sweep's stateless ``sync_once``), one
+    compressed step's elementwise error is bounded by the sum of the
+    quantization steps: ``dp`` stage-1 scales (each ``<= kappa *
+    max|g_total| / 127``, where ``kappa`` bounds the local-partial to
+    total absmax ratio — partial sums can exceed their total under
+    cancellation, ~<= 4 in practice for the weighted-CE gradients) plus
+    one stage-2 scale, each contributing at most half a step. Relative
+    to ``max|g_total|`` that is ``kappa * (dp + 1) / 254`` — ~8% at
+    ``dp=4``. The *training* path is much tighter than this single-step
+    bound: error feedback cancels the bias cumulatively
+    (tests/test_int8_ef.py), and the sweep only certifies that the
+    compressed wire protocol reduces to the §3.1 weighted sum.
+    """
+    return kappa * (dp_degree + 1) / 254.0
 
 
 @dataclass

@@ -8,9 +8,12 @@ Two sync spellings of the same pure ``make_train_step`` are supported:
 
 * ``sync="shard_map"`` (default) — the §3.1 wire protocol made explicit:
   manual ``shard_map`` over the mesh, one SPARe DP group per ``data``
-  slice, supplier-weighted local gradients psummed ONCE per step via
-  ``weighted_all_reduce(..., axis_name="data")`` +
-  :func:`~repro.dist.collectives.all_reduce_grads`. Per-device
+  slice, supplier-weighted local gradients reduced ONCE per step via
+  ``weighted_all_reduce(..., axis_name="data")`` + a **bucketed flat
+  gradient sync** (:class:`~repro.dist.collectives.BucketedAllReduce`):
+  the gradient pytree is flattened into a handful of size-capped
+  contiguous fp32 buckets, so the per-step sync costs O(1) collectives
+  regardless of leaf count, with a bit-transparent unflatten. Per-device
   parameters are replicas (pure DP), which keeps the manual program
   free of tensor-parallel collectives.
 * ``sync="gspmd"`` — the dry-run's production spelling: ``jit`` with
@@ -22,15 +25,31 @@ Two sync spellings of the same pure ``make_train_step`` are supported:
   programs in the pinned toolchain — ``IsManualSubgroup`` check — so
   the executor keeps the two proven paths instead.)
 
-Failure masking is identical in both: recovery is pure weight-table
+``grad_compress="int8_ef"`` (shard_map sync only) swaps the bucketed
+psum for the two-phase int8 error-feedback wire protocol
+(:class:`~repro.dist.collectives.CompressedBucketSync`): int8 payloads +
+per-bucket fp32 scales over the wire (~4x fewer gradient-sync bytes,
+gated on compiled HLO by ``launch/hlo.py``), dequant-accumulated in fp32
+inside the ``shard_map`` program — never int-psummed, so no overflow at
+any DP degree. The EF residuals are device-local sharded state threaded
+through the step (donated like params/opt) and preserved across
+wipe-out rollback.
+
+Input feeding is **per-host**: each batch leaf is built with
+``jax.make_array_from_callback``, so a host materializes only the
+example rows its addressable shards cover (the pipeline is counter-based
+and coordination-free), and the next step's rows are prefetched on a
+builder thread while the dispatched step executes (double buffering).
+
+Failure masking is identical in all modes: recovery is pure weight-table
 data. After ``scheme.recover`` re-plans the schedule, the next step
 feeds the new ``SpareState.device_schedule()`` weights through the
 batch — no resharding, no new collectives, no recompile (executables
 are cached per ``S_A``). The paper's zero-extra-collectives property is
-asserted on compiled HLO in ``tests/test_exec.py``, and the whole
-:class:`~repro.train.injection.ScenarioInjector` bridge is inherited,
-so rack/pod burst events from the scenario engine re-weight the live
-mesh step mid-run.
+asserted on compiled HLO in ``tests/test_exec.py`` — with and without
+compression — and the whole :class:`~repro.train.injection
+.ScenarioInjector` bridge is inherited, so rack/pod burst events from
+the scenario engine re-weight the live mesh step mid-run.
 
 Runs anywhere: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 fans a CPU host out into 8 emulated devices executing the same SPMD
@@ -38,41 +57,29 @@ program (partitioner, collectives, HLO) a TPU pod would run.
 """
 from __future__ import annotations
 
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.data import spare_batch
+from repro.data import spare_batch_rows
+from repro.dist.collectives import (BucketedAllReduce, CompressedBucketSync,
+                                    bucket_layout,
+                                    shard_map_compat as _shard_map)
 from repro.launch.mesh import make_emulated_mesh
 from repro.models.config import ModelConfig
 from repro.train.step import make_train_step, weighted_loss
 from repro.train.trainer import SpareTrainer, TrainReport
 
-try:  # moved to jax.shard_map in newer releases
-    from jax.experimental.shard_map import shard_map as _shard_map_raw
-except ImportError:  # pragma: no cover - future jax
-    _shard_map_raw = jax.shard_map
-
-
-def _shard_map(fn, *, mesh, in_specs, out_specs):
-    """shard_map across jax versions: the replication checker flag was
-    renamed ``check_rep`` -> ``check_vma``; disable it under either name
-    (the executor's out_specs declare replication the checker cannot
-    prove through psum/custom_vjp)."""
-    try:
-        return _shard_map_raw(fn, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_rep=False)
-    except TypeError:  # pragma: no cover - newer jax
-        return _shard_map_raw(fn, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_vma=False)
-
 
 __all__ = ["MeshExecutor", "executor_param_specs"]
 
 _SYNCS = ("shard_map", "gspmd")
+_COMPRESS = (None, "int8_ef")
 
 
 def executor_param_specs(params, model_degree: int):
@@ -101,17 +108,31 @@ class MeshExecutor(SpareTrainer):
     model_degree: tensor-parallel degree of the default mesh (gspmd
         sync; the manual shard_map program treats model columns as
         replicas).
-    sync: ``"shard_map"`` (explicit psum) or ``"gspmd"`` (NamedShardings,
-        params on the model axis) — see the module docstring.
+    sync: ``"shard_map"`` (explicit bucketed psum) or ``"gspmd"``
+        (NamedShardings, params on the model axis) — see the module
+        docstring.
+    grad_compress: ``None`` (fp32 buckets on the wire) or ``"int8_ef"``
+        (two-phase int8 error-feedback compressed sync; shard_map only).
+    bucket_mb: flat-bucket size cap in MiB of fp32 — the gradient sync
+        issues O(total_params / bucket) collectives per step, never one
+        per leaf.
     """
 
     def __init__(self, cfg: ModelConfig, *, n_groups: int, redundancy: int,
                  mesh: jax.sharding.Mesh | None = None,
                  model_degree: int = 1, sync: str = "shard_map",
+                 grad_compress: str | None = None, bucket_mb: float = 32.0,
                  base_lr: float = 3e-4, total_steps: int = 1000,
                  **kwargs: Any):
         if sync not in _SYNCS:
             raise ValueError(f"sync must be one of {_SYNCS}, got {sync!r}")
+        if grad_compress not in _COMPRESS:
+            raise ValueError(f"grad_compress must be one of {_COMPRESS}, "
+                             f"got {grad_compress!r}")
+        if grad_compress and sync != "shard_map":
+            raise ValueError(
+                "grad_compress needs the manual collective program: use "
+                "sync='shard_map' (gspmd derives its own fp32 all-reduce)")
         if mesh is None:
             mesh = make_emulated_mesh(n_groups, model_degree)
         if "model" not in mesh.axis_names or "data" not in mesh.axis_names:
@@ -119,6 +140,7 @@ class MeshExecutor(SpareTrainer):
                              f"got {mesh.axis_names}")
         self.mesh = mesh
         self.sync = sync
+        self.grad_compress = grad_compress
         self.data_degree = mesh.shape["data"]
         self.model_degree = mesh.shape["model"]
         super().__init__(cfg, n_groups=n_groups, redundancy=redundancy,
@@ -129,12 +151,32 @@ class MeshExecutor(SpareTrainer):
                 f"{examples} stacked examples do not divide the data axis "
                 f"({self.data_degree}); pick per_type_batch so that "
                 f"N*per_type_batch % data == 0")
+        # bucketed flat sync: the manual program's per-step gradient
+        # reduction is O(n_buckets) collectives (fp32 psum, or the int8
+        # EF wire protocol), never one per parameter leaf
+        self._grad_sync = None
+        self._ef_state = None
+        self._ef_snapshot = None
+        if sync == "shard_map":
+            acc = jnp.dtype(cfg.grad_accum_dtype)
+            gtree = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, acc), self.params)
+            self._layout = bucket_layout(
+                gtree, max_bucket_elems=max(int(bucket_mb * (1 << 20) // 4),
+                                            self.data_degree),
+                pad_to=self.data_degree)
+            if grad_compress == "int8_ef":
+                self._grad_sync = CompressedBucketSync(
+                    self._layout, self.data_degree, "data")
+            else:
+                self._grad_sync = BucketedAllReduce(self._layout, "data")
         # the sharded spelling of the step the parent already built: the
         # same pure function, with the named-axis gradient sync when the
         # program is manual
         self._step_fn = make_train_step(
             self.model, base_lr=base_lr, total_steps=total_steps,
-            axis_name="data" if sync == "shard_map" else None)
+            axis_name="data" if sync == "shard_map" else None,
+            grad_sync=self._grad_sync)
         if sync == "gspmd":
             p_specs = executor_param_specs(self.params, self.model_degree)
         else:   # manual program: per-device replicas, pure DP
@@ -147,7 +189,22 @@ class MeshExecutor(SpareTrainer):
             nu=jax.tree.map(lambda s: s, self._pshard))
         self.params = jax.device_put(self.params, self._pshard)
         self.opt_state = jax.device_put(self.opt_state, self._oshard)
+        if grad_compress:
+            self._ef_shard = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                self._grad_sync.state_specs())
+            self._ef_state = jax.device_put(self._grad_sync.init_state(),
+                                            self._ef_shard)
+        # per-host feeding plumbing: batch shardings hoisted out of the
+        # per-step path, plus the one-slot double buffer (the builder
+        # thread materializes the next step's rows while the dispatched
+        # step executes)
+        self._bshard = {k: NamedSharding(mesh, s)
+                        for k, s in self._batch_specs().items()}
+        self._feed_pool = ThreadPoolExecutor(max_workers=1)
+        self._prefetch: tuple[tuple, Future] | None = None
         self._mesh_grad_fn = None
+        self.total_recompiles = 0   # cache misses, run-driven or not
 
     # ------------------------------------------------------------- #
     # sharded step plumbing                                         #
@@ -166,39 +223,165 @@ class MeshExecutor(SpareTrainer):
     def _wrap_step(self, fn):
         """The jit-able sharded step for the configured sync mode."""
         if self.sync == "shard_map":
+            in_specs = [P(), P(), self._batch_specs()]
+            out_specs = [P(), P(), P()]
+            if self.grad_compress:
+                ef = self._grad_sync.state_specs()
+                in_specs.append(ef)
+                out_specs.append(ef)
             return _shard_map(fn, mesh=self.mesh,
-                              in_specs=(P(), P(), self._batch_specs()),
-                              out_specs=(P(), P(), P()))
+                              in_specs=tuple(in_specs),
+                              out_specs=tuple(out_specs))
         return fn   # gspmd: sharding comes from jit in/out shardings
 
-    def _compiled(self, s_a: int, report: TrainReport):
+    def _compiled(self, s_a: int, report: TrainReport | None = None):
         if s_a not in self._jitted:
             out_shardings = ((self._pshard, self._oshard, None)
                              if self.sync == "gspmd" else None)
+            donate = (0, 1, 3) if self.grad_compress else (0, 1)
             self._jitted[s_a] = jax.jit(self._wrap_step(self._step_fn),
                                         out_shardings=out_shardings,
-                                        donate_argnums=(0, 1))
-            report.recompiles += 1
+                                        donate_argnums=donate)
+            # total_recompiles is the order-independent count (HLO
+            # inspection can warm the cache outside any run); a run's
+            # report counts only the compiles that run triggered
+            self.total_recompiles += 1
+            if report is not None:
+                report.recompiles += 1
         return self._jitted[s_a]
+
+    # ------------------------------------------------------------- #
+    # per-host input feeding                                        #
+    # ------------------------------------------------------------- #
+    def _batch_shapes(self, s_a: int) -> dict[str, tuple[int, ...]]:
+        e = self.state.n * self.pipeline.per_type_batch
+        seq = self.pipeline.seq
+        shapes = {"labels": (s_a, e, seq), "weights": (s_a, e)}
+        if self.cfg.frontend is not None:
+            shapes["embeds"] = (s_a, e, seq, self.cfg.d_model)
+        else:
+            shapes["tokens"] = (s_a, e, seq)
+        return shapes
+
+    def _feed_ranges(self, s_a: int) -> list[tuple[int, int]]:
+        """Example-row ranges [lo, hi) this host must materialize — the
+        union of its addressable shards of the example axis."""
+        shape = self._batch_shapes(s_a)["weights"]
+        imap = self._bshard["weights"].addressable_devices_indices_map(shape)
+        ranges = set()
+        for idx in imap.values():
+            sl = idx[1]
+            ranges.add((sl.start or 0,
+                        shape[1] if sl.stop is None else sl.stop))
+        return sorted(ranges)
+
+    def _host_slabs(self, schedule, s_a: int, step: int) -> dict:
+        """Materialize only this host's example rows: {(lo, hi) -> np
+        batch dict}. Runs on the builder thread for the prefetched step."""
+        return {(lo, hi): spare_batch_rows(self.pipeline, schedule, s_a,
+                                           step, lo, hi)
+                for lo, hi in self._feed_ranges(s_a)}
+
+    def _place_slabs(self, s_a: int, slabs: dict) -> dict:
+        """Assemble the sharded global batch without ever materializing
+        it: each addressable shard's callback serves a view of the slab
+        covering its rows."""
+        shapes = self._batch_shapes(s_a)
+
+        def maker(key):
+            shape = shapes[key]
+
+            def cb(index):
+                sl = index[1]
+                lo = sl.start or 0
+                hi = shape[1] if sl.stop is None else sl.stop
+                for (rlo, rhi), slab in slabs.items():
+                    if rlo <= lo and hi <= rhi:
+                        rows = slice(lo - rlo, hi - rlo)
+                        return slab[key][(index[0], rows) + tuple(index[2:])]
+                raise KeyError(f"no host slab covers rows [{lo}, {hi})")
+
+            return jax.make_array_from_callback(shape, self._bshard[key], cb)
+
+        return {k: maker(k) for k in shapes}
+
+    def _batch_key(self, state, step: int):
+        """Prefetch identity: the batch is a pure function of (step,
+        schedule). The schedule arrays are snapshotted so the builder
+        thread never reads mutable trainer state."""
+        stack_types, wts = state.device_schedule()
+        key = (step, state.s_a, stack_types.tobytes(), wts.tobytes())
+        return key, (stack_types, wts)
 
     def _device_batch(self, step: int | None = None, state=None) -> dict:
         state = self.state if state is None else state
         step = self.step if step is None else step
-        batch_np = spare_batch(self.pipeline, state, step)
-        specs = self._batch_specs()
-        return {k: jax.device_put(jnp.asarray(v),
-                                  NamedSharding(self.mesh, specs[k]))
-                for k, v in batch_np.items()}
+        key, schedule = self._batch_key(state, step)
+        slabs = None
+        if self._prefetch is not None:
+            pkey, fut = self._prefetch
+            self._prefetch = None
+            if pkey == key:
+                slabs = fut.result()
+            # else: a failure re-planned the schedule (or the caller
+            # asked for a different step) — the prefetched rows are
+            # stale; drop them and build synchronously
+        if slabs is None:
+            slabs = self._host_slabs(schedule, state.s_a, step)
+        return self._place_slabs(state.s_a, slabs)
+
+    def _prefetch_next(self):
+        """Double buffer: queue the NEXT step's row materialization on
+        the builder thread while the current step executes on device."""
+        key, schedule = self._batch_key(self.state, self.step + 1)
+        self._prefetch = (key, self._feed_pool.submit(
+            self._host_slabs, schedule, self.state.s_a, self.step + 1))
 
     def _dispatch(self, report: TrainReport):
         batch = self._device_batch()
         fn = self._compiled(self.state.s_a, report)
-        return fn(self.params, self.opt_state, batch)
+        if self.grad_compress:
+            out = fn(self.params, self.opt_state, batch, self._ef_state)
+            params, opt_state, metrics, self._ef_state = out
+            result = (params, opt_state, metrics)
+        else:
+            result = fn(self.params, self.opt_state, batch)
+        # the step is dispatched (async); overlap the next batch build
+        self._prefetch_next()
+        return result
+
+    def run(self, *args, **kwargs):
+        try:
+            return super().run(*args, **kwargs)
+        finally:
+            # the last dispatched step speculatively built rows for a
+            # step that will never execute — do not pin those slabs
+            self._prefetch = None
+
+    def close(self) -> None:
+        """Release the feeding plumbing (builder thread + any pending
+        prefetched slabs). The executor stays usable for HLO inspection
+        but must not dispatch further steps."""
+        self._prefetch = None
+        self._feed_pool.shutdown(wait=False)
+
+    # ------------------------------------------------------------- #
+    # snapshot / rollback (EF residuals ride along)                 #
+    # ------------------------------------------------------------- #
+    def _snapshot_now(self) -> None:
+        super()._snapshot_now()
+        if self._ef_state is not None:
+            self._ef_snapshot = jax.tree.map(np.asarray, self._ef_state)
 
     def _rollback(self):
         """Wipe-out restore: the snapshot tiers hand back host arrays —
-        re-place them under the mesh shardings before training resumes."""
+        re-place them under the mesh shardings before training resumes.
+        The EF residuals roll back to the same step as params (the
+        untransmitted signal belongs to the discarded trajectory)."""
         step, (params, opt_state) = super()._rollback()
+        if self._ef_snapshot is not None:
+            self._ef_state = jax.device_put(self._ef_snapshot,
+                                            self._ef_shard)
         return step, (jax.device_put(params, self._pshard),
                       jax.device_put(opt_state, self._oshard))
 
@@ -211,10 +394,13 @@ class MeshExecutor(SpareTrainer):
         per-step gradient sync. The §3.1 oracle for mesh-vs-host
         equivalence — must match :meth:`SpareTrainer.spare_grads` (same
         params, same deterministic batch) up to all-reduce
-        summation-order noise."""
+        summation-order noise (plus one step's bounded quantization
+        error when ``grad_compress`` is on — zero EF residuals, see
+        ``exec/equivalence.py::int8_sweep_tolerance``)."""
         if self._mesh_grad_fn is None:
             model = self.model
             axis = "data" if self.sync == "shard_map" else None
+            sync = self._grad_sync
 
             def total_loss(params, batch):
                 def body(acc, micro):
@@ -226,10 +412,11 @@ class MeshExecutor(SpareTrainer):
 
             def grads(params, batch):
                 g = jax.grad(total_loss)(params, batch)
-                if axis is not None:
-                    from repro.dist.collectives import all_reduce_grads
-                    g = all_reduce_grads(g, axis)
-                return g
+                if axis is None:
+                    return g
+                if self.grad_compress:
+                    return sync.sync_once(g)
+                return sync(g)
 
             if self.sync == "shard_map":
                 fn = _shard_map(grads, mesh=self.mesh,
@@ -248,15 +435,18 @@ class MeshExecutor(SpareTrainer):
     def compiled_step_text(self, state=None) -> str:
         """Post-SPMD HLO of the step for the given (default: current)
         schedule — feed to :func:`repro.launch.hlo.collective_report` to
-        count the sync collectives masked vs unmasked."""
+        count the sync collectives masked vs unmasked. Routed through
+        the per-``S_A`` ``_jitted`` cache, so repeated calls (and the
+        live run) share one executable per stack depth; a cache warm-up
+        here counts toward ``total_recompiles`` but not toward any
+        run's ``report.recompiles``."""
         state = self.state if state is None else state
         batch = self._device_batch(state=state)
-        out_shardings = ((self._pshard, self._oshard, None)
-                         if self.sync == "gspmd" else None)
-        fn = jax.jit(self._wrap_step(self._step_fn),
-                     out_shardings=out_shardings)
-        return fn.lower(self.params, self.opt_state, batch) \
-                 .compile().as_text()
+        fn = self._compiled(state.s_a)
+        args = [self.params, self.opt_state, batch]
+        if self.grad_compress:
+            args.append(self._ef_state)
+        return fn.lower(*args).compile().as_text()
 
     @property
     def compiled_depths(self) -> list[int]:

@@ -182,6 +182,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # pre-0.5 jax: one dict per program
+        ca = ca[0] if ca else {}
     # trip-count-aware accounting (XLA's cost_analysis visits while bodies
     # once — useless for scan-over-layers; see repro/launch/hlo.py)
     hc = analyze_hlo(compiled.as_text())

@@ -27,7 +27,8 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["HloCost", "analyze_hlo"]
+__all__ = ["HloCost", "analyze_hlo", "collective_report",
+           "wire_byte_ratio", "same_collective_schedule"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -107,6 +108,9 @@ class HloCost:
     bytes_written: float = 0.0    # outputs only (optimistic-fusion lower bound)
     collective_bytes: dict = field(default_factory=dict)
     collective_counts: dict = field(default_factory=dict)
+    # (op, payload dtype) -> moved bytes: separates the int8 compressed
+    # gradient payload from fp32 scales/loss psums in the wire report
+    collective_dtype_bytes: dict = field(default_factory=dict)
     unknown_trip_loops: int = 0
 
     def scaled(self, k: float) -> "HloCost":
@@ -114,6 +118,7 @@ class HloCost:
             self.flops * k, self.bytes_accessed * k, self.bytes_written * k,
             {o: b * k for o, b in self.collective_bytes.items()},
             {o: c * k for o, c in self.collective_counts.items()},
+            {o: b * k for o, b in self.collective_dtype_bytes.items()},
             self.unknown_trip_loops,
         )
 
@@ -125,6 +130,9 @@ class HloCost:
             self.collective_bytes[o] = self.collective_bytes.get(o, 0) + b
         for o, c in other.collective_counts.items():
             self.collective_counts[o] = self.collective_counts.get(o, 0) + c
+        for o, b in other.collective_dtype_bytes.items():
+            self.collective_dtype_bytes[o] = \
+                self.collective_dtype_bytes.get(o, 0) + b
         self.unknown_trip_loops += other.unknown_trip_loops
 
     @property
@@ -329,9 +337,13 @@ def _cost_of(comp_name: str, comps: dict[str, Computation],
             # XLA:CPU float-normalization promotes bf16 collectives to f32
             # (promoted reduction computations / converts hoisted before
             # the collective); XLA:TPU moves bf16 natively — count wire
-            # bytes at the logical width.
-            promoted = "_promoted" in instr.attrs
-            if not promoted and instr.operands:
+            # bytes at the logical width. Only an f32 payload can be a
+            # promoted bf16 one: int8 compressed payloads also come out
+            # of a convert fusion (f32 -> s8 quantize) and must NOT be
+            # halved.
+            dt = instr.out_shapes[0][0] if instr.out_shapes else "?"
+            promoted = dt == "f32" and "_promoted" in instr.attrs
+            if not promoted and dt == "f32" and instr.operands:
                 producer = comp.by_name.get(instr.operands[0])
                 if producer is not None and (
                         producer.op == "convert"
@@ -349,6 +361,10 @@ def _cost_of(comp_name: str, comps: dict[str, Computation],
                 cost.collective_bytes.get(base_op, 0.0) + moved
             cost.collective_counts[base_op] = \
                 cost.collective_counts.get(base_op, 0) + 1
+            if promoted:
+                dt = "bf16"       # logical width the wire actually moves
+            cost.collective_dtype_bytes[(base_op, dt)] = \
+                cost.collective_dtype_bytes.get((base_op, dt), 0.0) + moved
             continue  # ICI traffic — keep out of the HBM bytes term
 
         if not flops_only and op not in _NO_BYTES and op != "reshape":
@@ -377,10 +393,49 @@ def analyze_hlo(hlo_text: str) -> HloCost:
 
 
 def collective_report(hlo_text: str) -> dict:
-    """Back-compat wrapper: trip-count-aware collective table."""
+    """Back-compat wrapper: trip-count-aware collective table.
+
+    ``by_dtype`` splits the per-op wire bytes by payload dtype (keys
+    ``"op/dtype"``) — the view that shows the compressed gradient sync
+    moving int8 payloads + a sliver of fp32 scales instead of fp32
+    buckets.
+    """
     cost = analyze_hlo(hlo_text)
     return {
         "counts": {k: int(v) for k, v in cost.collective_counts.items()},
         "bytes": {k: round(v) for k, v in cost.collective_bytes.items()},
+        "by_dtype": {f"{op}/{dt}": round(v) for (op, dt), v in
+                     sorted(cost.collective_dtype_bytes.items())},
         "total_bytes": round(cost.total_collective_bytes),
     }
+
+
+def _as_cost(hlo: "str | HloCost") -> HloCost:
+    return hlo if isinstance(hlo, HloCost) else analyze_hlo(hlo)
+
+
+def wire_byte_ratio(hlo: "str | HloCost",
+                    baseline: "str | HloCost") -> float:
+    """Per-device collective wire bytes of ``hlo`` relative to
+    ``baseline`` (compiled HLO text or pre-parsed costs).
+
+    This is the gate for the compressed gradient sync: the int8-EF step
+    must come in at <= ~0.3x of the fp32 step's gradient-sync traffic
+    (ISSUE-5 acceptance; the two-phase protocol's ideal is 0.25x + the
+    fp32-scale sliver). Both steps run the same program shape otherwise,
+    so the total-collective ratio IS the gradient-sync ratio on the
+    manual (pure-DP) program.
+    """
+    base = _as_cost(baseline).total_collective_bytes
+    return _as_cost(hlo).total_collective_bytes / max(base, 1e-30)
+
+
+def same_collective_schedule(a: "str | HloCost",
+                             b: "str | HloCost") -> bool:
+    """True iff two compiled steps carry the identical collective
+    schedule — same op counts AND same per-op moved bytes. The
+    masked-vs-unmasked invariant (failure masking is weight data, zero
+    extra collectives) must hold with compression on or off."""
+    ca, cb = _as_cost(a), _as_cost(b)
+    return (ca.collective_counts == cb.collective_counts
+            and ca.collective_bytes == cb.collective_bytes)

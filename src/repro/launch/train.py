@@ -127,9 +127,16 @@ def main() -> None:
                     help="tensor-parallel degree of the --mesh mesh")
     ap.add_argument("--sync", default="shard_map",
                     choices=("shard_map", "gspmd"),
-                    help="--mesh gradient-sync spelling: explicit psum "
-                         "under shard_map, or GSPMD NamedShardings with "
-                         "params sharded on the model axis")
+                    help="--mesh gradient-sync spelling: explicit "
+                         "bucketed psum under shard_map, or GSPMD "
+                         "NamedShardings with params sharded on the "
+                         "model axis")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=("none", "int8_ef"),
+                    help="--mesh only: compress the bucketed gradient "
+                         "sync (int8 payload + per-bucket scales over "
+                         "the wire, EF residuals as device-local state; "
+                         "requires --sync shard_map)")
     ap.add_argument("--scheme", default="spare",
                     help="fault-tolerance scheme (repro.des registry: "
                          "spare | replication | ckpt_only | adaptive)")
@@ -165,7 +172,8 @@ def main() -> None:
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.scaled(grad_accum=1)
     r = _resolve_r(args)
-    plane = (f"{args.n_groups}x{args.model_degree}/{args.sync}"
+    tag = "" if args.grad_compress == "none" else f"+{args.grad_compress}"
+    plane = (f"{args.n_groups}x{args.model_degree}/{args.sync}{tag}"
              if args.mesh else "emulated")
     print(f"[train] arch={args.arch} N={args.n_groups} r={r} "
           f"scheme={args.scheme} steps={args.steps} mesh={plane} "
@@ -179,8 +187,11 @@ def main() -> None:
                   scheme=get_scheme(args.scheme, **scheme_kwargs))
     if args.mesh:
         from repro.exec import MeshExecutor
+        compress = None if args.grad_compress == "none" else \
+            args.grad_compress
         trainer = MeshExecutor(cfg, model_degree=args.model_degree,
-                               sync=args.sync, **common)
+                               sync=args.sync, grad_compress=compress,
+                               **common)
     else:
         trainer = SpareTrainer(cfg, **common)
     if args.failure_model is not None:

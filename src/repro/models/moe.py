@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.dist.collectives import shard_map_compat
+
 from .config import ModelConfig, MoEConfig
 
 __all__ = ["route_topk", "moe_ffn_reference", "moe_ffn", "expert_ffn_local"]
@@ -187,11 +189,11 @@ def moe_ffn(x: jax.Array, p: dict, cfg: ModelConfig,
         in_specs.append({"w_gate": P(None, ep_axis), "w_up": P(None, ep_axis),
                          "w_down": P(ep_axis, None)})
         args.append(shared)
-        fn = jax.shard_map(
+        fn = shard_map_compat(
             lambda a, b, c, dsh: body(a, b, c, dsh), mesh=mesh,
-            in_specs=tuple(in_specs), out_specs=x_spec, check_vma=False)
+            in_specs=tuple(in_specs), out_specs=x_spec)
     else:
-        fn = jax.shard_map(
+        fn = shard_map_compat(
             lambda a, b, c: body(a, b, c, None), mesh=mesh,
-            in_specs=tuple(in_specs), out_specs=x_spec, check_vma=False)
+            in_specs=tuple(in_specs), out_specs=x_spec)
     return fn(*args)

@@ -60,7 +60,8 @@ def weighted_loss(model: Model, params: Any, micro: dict,
 def make_train_step(model: Model, *, base_lr: float = 3e-4,
                     warmup: int = 100, total_steps: int = 10_000,
                     weight_decay: float = 0.1, clip_norm: float = 1.0,
-                    grad_shardings=None, axis_name: str | None = None):
+                    grad_shardings=None, axis_name: str | None = None,
+                    grad_sync=None):
     """Build the pure train_step; caller jits with shardings.
 
     ``grad_shardings`` (pytree of NamedSharding matching params) pins the
@@ -75,6 +76,16 @@ def make_train_step(model: Model, *, base_lr: float = 3e-4,
     are psummed ONCE per step after the microbatch scan — the §3.1
     weighted all-reduce. Because the masking weights ride in the batch,
     a failure re-weight changes neither the program nor its collectives.
+
+    ``grad_sync`` replaces the default per-leaf
+    :func:`~repro.dist.collectives.all_reduce_grads` with a custom
+    post-scan reduction — :class:`~repro.dist.collectives
+    .BucketedAllReduce` (O(1) flat-bucket psums) or
+    :class:`~repro.dist.collectives.CompressedBucketSync` (int8 EF over
+    the wire). A *stateful* sync (``grad_sync.stateful``) changes the
+    step signature to ``(params, opt, batch, ef_state) -> (params, opt,
+    metrics, ef_state)``: the error-feedback residuals are device-local
+    sharded state the caller threads (and snapshots) alongside params.
     """
 
     def micro_grads(params, micro):
@@ -82,8 +93,9 @@ def make_train_step(model: Model, *, base_lr: float = 3e-4,
             params, micro, axis_name=axis_name)
 
     acc_dtype = jnp.dtype(model.cfg.grad_accum_dtype)
+    stateful = getattr(grad_sync, "stateful", False)
 
-    def train_step(params, opt_state, batch):
+    def accumulate(params, batch):
         # batch leaves: (n_micro, b, ...) — scan-accumulate gradients
         zero = jax.tree.map(
             lambda p: jnp.zeros(p.shape, acc_dtype), params)
@@ -106,10 +118,9 @@ def make_train_step(model: Model, *, base_lr: float = 3e-4,
 
         (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), zero),
                                         batch)
-        if axis_name is not None:
-            # the one gradient sync of the step: sum the accumulated
-            # (already supplier-weighted) partials across the data axis
-            grads = all_reduce_grads(grads, axis_name)
+        return loss, grads
+
+    def update(params, opt_state, loss, grads):
         # step+1: opt.step counts *completed* updates; lr(0)=0 would make
         # the first update a silent no-op
         lr = cosine_lr(opt_state.step + 1, base_lr, warmup, total_steps)
@@ -119,7 +130,24 @@ def make_train_step(model: Model, *, base_lr: float = 3e-4,
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return params, opt_state, metrics
 
-    return train_step
+    def train_step(params, opt_state, batch):
+        loss, grads = accumulate(params, batch)
+        if grad_sync is not None:
+            # the one gradient sync of the step, bucketed: O(1) psums
+            # (or the compressed int8-EF wire protocol via train_step_ef)
+            grads = grad_sync(grads)
+        elif axis_name is not None:
+            # per-leaf spelling: sum the accumulated (already
+            # supplier-weighted) partials across the data axis
+            grads = all_reduce_grads(grads, axis_name)
+        return update(params, opt_state, loss, grads)
+
+    def train_step_ef(params, opt_state, batch, ef_state):
+        loss, grads = accumulate(params, batch)
+        grads, ef_state = grad_sync(grads, ef_state)
+        return (*update(params, opt_state, loss, grads), ef_state)
+
+    return train_step_ef if stateful else train_step
 
 
 def make_serve_step(model: Model):

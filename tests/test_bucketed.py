@@ -1,0 +1,185 @@
+"""Bucketed flat gradient sync + per-host feeding, host-side (tier-1).
+
+The mesh spelling is covered by the ``spmd``-marked tests in
+``test_exec.py``; everything here runs on one CPU device:
+
+* deterministic first-fit bucket packing (size cap, oversize leaves,
+  ``pad_to`` padding);
+* bit-transparent flatten/unflatten round trip for every gradient dtype
+  the accumulator can carry (fp32 exact by identity, bf16/fp16 exact by
+  lossless widening);
+* the EF cumulative invariant *through the bucketed compressor* across
+  ragged leaf sizes and bucket padding — the padded tail must stay
+  exactly zero so it never leaks signal into the wire scales;
+* ``spare_batch_rows`` (the per-host feeding cut) is row-for-row
+  byte-identical to the global ``spare_batch``, including cuts that
+  split a group's per-type batch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.collectives import (bucket_layout, compress_grad_int8,
+                                    decompress_grad_int8, flatten_grads,
+                                    unflatten_grads)
+
+RNG = np.random.default_rng(11)
+
+
+def _ragged_tree():
+    return {
+        "a": jnp.asarray(RNG.normal(size=(33, 7)), jnp.float32),
+        "b": jnp.asarray(RNG.normal(size=(129,)), jnp.bfloat16),
+        "nest": {"c": jnp.asarray(RNG.normal(size=(5, 3, 2)), jnp.float16),
+                 "d": jnp.asarray(RNG.normal(), jnp.float32)},   # scalar
+        "e": jnp.asarray(RNG.normal(size=(999,)), jnp.float32),
+    }
+
+
+# ------------------------------------------------------------------ #
+# layout packing                                                     #
+# ------------------------------------------------------------------ #
+def test_layout_packs_first_fit_with_cap_and_padding():
+    tree = _ragged_tree()
+    lay = bucket_layout(tree, max_bucket_elems=300, pad_to=8)
+    # leaf order is jax.tree order (dict keys sorted: a, b, e, nest.c,
+    # nest.d); each bucket respects the cap unless a single leaf alone
+    # exceeds it (999 gets a bucket of its own)
+    sizes = [int(np.prod(l.shape)) if l.shape else 1
+             for l in jax.tree.leaves(tree)]
+    assert sizes == [231, 129, 999, 5 * 3 * 2, 1]
+    assert lay.n_buckets == 4
+    assert lay.bucket_of == (0, 1, 2, 3, 3)
+    # padded up to pad_to multiples; unpadded fills are 231/129/999/31
+    assert lay.bucket_sizes == (232, 136, 1000, 32)
+    assert all(s % 8 == 0 for s in lay.bucket_sizes)
+    # deterministic: same tree -> same layout
+    assert bucket_layout(tree, max_bucket_elems=300, pad_to=8) == lay
+
+
+def test_layout_is_constant_collective_count():
+    """O(1) property: 100 leaves under one cap -> few buckets, and the
+    bucket count depends on total elements, never on leaf count."""
+    many = {f"w{i}": jnp.zeros((37,), jnp.float32) for i in range(100)}
+    lay = bucket_layout(many, max_bucket_elems=1 << 20)
+    assert lay.n_buckets == 1
+    split = bucket_layout(many, max_bucket_elems=1000)
+    assert split.n_buckets == int(np.ceil(100 * 37 / (27 * 37))) or \
+        split.n_buckets < 100 // 2   # far fewer buckets than leaves
+    assert split.n_buckets <= 4
+
+
+# ------------------------------------------------------------------ #
+# bit transparency (the uncompressed path)                           #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("pad_to", [1, 4, 128])
+def test_flatten_unflatten_bit_transparent(pad_to):
+    tree = _ragged_tree()
+    lay = bucket_layout(tree, max_bucket_elems=500, pad_to=pad_to)
+    bufs = flatten_grads(lay, tree)
+    assert all(b.dtype == jnp.float32 for b in bufs)
+    assert [b.size for b in bufs] == list(lay.bucket_sizes)
+    back = unflatten_grads(lay, bufs)
+    flat_a, flat_b = jax.tree.leaves(tree), jax.tree.leaves(back)
+    for a, b in zip(flat_a, flat_b):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        # widening to fp32 is injective for bf16/fp16, so fp32 equality
+        # IS bit equality of the narrow values
+        np.testing.assert_array_equal(np.asarray(a.astype(jnp.float32)),
+                                      np.asarray(b.astype(jnp.float32)))
+
+
+def test_padding_is_zero_and_ignored():
+    tree = {"a": jnp.asarray(RNG.normal(size=(13,)), jnp.float32)}
+    lay = bucket_layout(tree, pad_to=8)
+    (buf,) = flatten_grads(lay, tree)
+    assert buf.size == 16
+    assert not np.asarray(buf[13:]).any()
+    # corrupt the pad: unflatten must not see it
+    poisoned = buf.at[13:].set(1e9)
+    np.testing.assert_array_equal(
+        np.asarray(unflatten_grads(lay, [poisoned])["a"]),
+        np.asarray(tree["a"]))
+
+
+# ------------------------------------------------------------------ #
+# EF cumulative invariant through the bucketed compressor            #
+# ------------------------------------------------------------------ #
+def test_ef_cumulative_invariant_ragged_buckets():
+    """k compressed steps of a fixed ragged gradient tree: per bucket,
+    cumulative transmitted == k * bucket - final residual (exactly the
+    single-tensor EF invariant, surviving concatenation + padding), and
+    the padded tail transmits exactly zero forever."""
+    tree = _ragged_tree()
+    lay = bucket_layout(tree, max_bucket_elems=300, pad_to=8)
+    bufs = flatten_grads(lay, tree)
+    errs = [jnp.zeros_like(b) for b in bufs]
+    sent = [jnp.zeros_like(b) for b in bufs]
+    k = 12
+    for _ in range(k):
+        out, new_errs = [], []
+        for buf, err in zip(bufs, errs):
+            q, s, err = jax.jit(compress_grad_int8)(buf, err)
+            out.append(decompress_grad_int8(q, s))
+            new_errs.append(err)
+        sent = [a + b for a, b in zip(sent, out)]
+        errs = new_errs
+    fills = [0] * lay.n_buckets         # unpadded fill per bucket
+    for i, shape in enumerate(lay.shapes):
+        n = int(np.prod(shape)) if shape else 1
+        fills[lay.bucket_of[i]] = max(fills[lay.bucket_of[i]],
+                                      lay.offsets[i] + n)
+    pads = [s - f for s, f in zip(lay.bucket_sizes, fills)]
+    assert any(pads), "padding must actually be exercised"
+    for buf, tot, err, n_pad in zip(bufs, sent, errs, pads):
+        scale = float(jnp.max(jnp.abs(buf))) / 127.0
+        resid = np.abs(np.asarray(k * buf - tot))
+        # the final residual is the only untransmitted signal
+        np.testing.assert_allclose(resid, np.abs(np.asarray(err)),
+                                   atol=1e-4)
+        assert resid.max() <= scale / 2 + 1e-4
+        if n_pad:
+            assert not np.asarray(tot[-n_pad:]).any()
+            assert not np.asarray(err[-n_pad:]).any()
+
+
+def test_unflatten_after_compress_respects_dtypes():
+    tree = _ragged_tree()
+    lay = bucket_layout(tree, max_bucket_elems=1 << 20, pad_to=4)
+    (buf,) = flatten_grads(lay, tree)
+    q, s, _ = compress_grad_int8(buf, jnp.zeros_like(buf))
+    back = unflatten_grads(lay, [decompress_grad_int8(q, s)])
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        # max error of one uncompensated step is scale/2
+        err = np.abs(np.asarray(a.astype(jnp.float32))
+                     - np.asarray(b.astype(jnp.float32)))
+        tol = float(s) / 2 + float(jnp.max(jnp.abs(
+            a.astype(jnp.float32)))) * 8e-3   # + bf16 leaf rounding
+        assert err.max() <= tol
+
+
+# ------------------------------------------------------------------ #
+# per-host feeding rows                                              #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "musicgen-medium"])
+def test_spare_batch_rows_matches_global(arch):
+    from repro.configs import smoke_config
+    from repro.core import Rectlr, SpareState
+    from repro.data import ShardedTokenPipeline, spare_batch, spare_batch_rows
+
+    cfg = smoke_config(arch)
+    pipe = ShardedTokenPipeline(cfg, seq=16, per_type_batch=2, seed=3)
+    state = SpareState(4, 2)
+    Rectlr().on_failures(state, [1])          # masked schedule, S_A == 2
+    full = spare_batch(pipe, state, step=5)
+    sched = state.device_schedule()
+    n_rows = 4 * 2
+    # every cut, including ones that split a group's 2-example shard
+    for lo, hi in [(0, n_rows), (0, 3), (3, 8), (2, 4), (5, 6)]:
+        cut = spare_batch_rows(pipe, sched, state.s_a, 5, lo, hi)
+        assert set(cut) == set(full)
+        for k in full:
+            np.testing.assert_array_equal(cut[k], full[k][:, lo:hi],
+                                          err_msg=f"{k} rows [{lo},{hi})")
