@@ -16,12 +16,15 @@ equals vanilla DP's gradient exactly; property-tested).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+
 import numpy as np
 
 from repro.core.state import SpareState
 from repro.models.config import ModelConfig
 
-__all__ = ["ShardedTokenPipeline", "spare_batch", "spare_batch_rows"]
+__all__ = ["ShardedTokenPipeline", "spare_batch", "spare_batch_rows",
+           "ServeRequest", "RequestStream"]
 
 
 class ShardedTokenPipeline:
@@ -98,6 +101,60 @@ def spare_batch_rows(pipeline: ShardedTokenPipeline,
     else:
         batch["tokens"] = toks[:, :, :-1]
     return batch
+
+
+@dataclass
+class ServeRequest:
+    """One decode request for the serving tier.
+
+    ``tokens`` is the exact-length prompt (no padding — the SSM prefill
+    runs through every token); ``max_new`` counts generated tokens
+    including the one the prefill itself produces.
+    """
+
+    req_id: int
+    tokens: np.ndarray                    # (L,) int32
+    max_new: int
+    generated: list = field(default_factory=list, repr=False)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+class RequestStream:
+    """Reproducible serving workload: req_id -> ServeRequest.
+
+    The same counter-based Philox trick as :class:`ShardedTokenPipeline`,
+    keyed per *request* — any replica (or a requeue after a replica
+    death) can re-materialize request ``i`` without coordination, which
+    is what makes the zero-dropped-requests assertion exact: a requeued
+    request is bit-identical to its first admission, and greedy decode
+    then reproduces the same output tokens on any survivor.
+
+    Prompt lengths are drawn from a small fixed ``buckets`` set — the
+    engine compiles one prefill executable per bucket (exact lengths, no
+    padding: see :meth:`repro.models.model.Model.prefill`).
+    """
+
+    def __init__(self, cfg: ModelConfig, buckets: tuple[int, ...] = (8, 16),
+                 max_new: int = 8, seed: int = 0):
+        if not buckets:
+            raise ValueError("need at least one prompt-length bucket")
+        self.cfg = cfg
+        self.buckets = tuple(sorted(buckets))
+        self.max_new = max_new
+        self.seed = seed
+
+    def request(self, req_id: int) -> ServeRequest:
+        rng = np.random.Generator(np.random.Philox(
+            key=self.seed, counter=[req_id, 0, 0, 0]))
+        length = self.buckets[int(rng.integers(len(self.buckets)))]
+        toks = rng.integers(0, self.cfg.vocab, (length,), dtype=np.int32)
+        return ServeRequest(req_id=req_id, tokens=toks, max_new=self.max_new)
+
+    def requests(self, n: int, start: int = 0) -> list[ServeRequest]:
+        return [self.request(i) for i in range(start, start + n)]
 
 
 def spare_batch(pipeline: ShardedTokenPipeline, state: SpareState,

@@ -26,7 +26,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["param_specs", "opt_specs", "batch_spec", "cache_specs"]
+__all__ = ["param_specs", "opt_specs", "batch_spec", "cache_specs",
+           "paged_cache_specs"]
 
 # output features live on the model axis; input features are FSDP
 _COL_PARALLEL = {"wq", "wk", "wv", "w_in", "w_gate", "w_up",
@@ -119,3 +120,16 @@ def cache_specs(cache_shapes, cfg, mesh, multi_pod: bool):
         return P(*(None,) * leaf.ndim)
 
     return jax.tree.map(spec, cache_shapes)
+
+
+def paged_cache_specs(pool_shapes, cfg, mesh, multi_pod: bool):
+    """Paged-pool specs (``Model.init_paged_state`` trees).
+
+    Dim 1 after the layer stack is the *page* axis for attention pools
+    and the *slot* axis for Mamba caches — both are the serving analogue
+    of the decode batch (each page/slot belongs to exactly one sequence),
+    so the same rule applies: shard it over the DP axes when divisible,
+    replicate otherwise. The block table itself stays host-side and never
+    enters the compiled program.
+    """
+    return cache_specs(pool_shapes, cfg, mesh, multi_pod)

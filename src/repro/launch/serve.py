@@ -1,71 +1,149 @@
-"""Serving launcher: batched greedy decoding with a KV/SSM cache.
+"""Serving launcher: continuous-batching decode over SPARe-masked replicas.
 
-``python -m repro.launch.serve --arch mamba2-1.3b --tokens 32`` runs a
-smoke-scale batch of requests end to end (prefill + decode loop) and
-reports tokens/s. On TPU the same driver jits ``serve_step`` with the
-production shardings (what the decode_* dry-run cells lower).
+``python -m repro.launch.serve --arch qwen2.5-3b --requests 16`` runs the
+full serving tier end to end on CPU: a deterministic
+:class:`~repro.data.pipeline.RequestStream` feeds a
+:class:`~repro.serve.replicas.ReplicaServer` (paged KV cache, fused
+prefill, per-slot decode), optionally under a live failure campaign:
+
+    python -m repro.launch.serve --arch qwen2.5-3b --requests 16 \\
+        --replicas 3 \\
+        --failure-model '{"kind": "correlated", "scope": "rack",
+                          "burst_prob": 1.0, "mtbf": 400.0}'
+
+Reports aggregate tokens/s, p50/p99 per-token latency, and the replica
+event log; exits non-zero if any admitted request failed to complete
+while a replica survived, or if anything compiled after warmup (the
+SPARe no-recompile gate). ``benchmarks/serving_bench.py`` wraps the same
+loop to record healthy-vs-degraded numbers in ``BENCH_serving.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+
+def build_server(args, cfg, model, params):
+    from repro.serve import ReplicaServer, pool_pages_for
+
+    injector = None
+    if args.failure_model:
+        from repro.des.params import DESParams
+        from repro.scenarios.topology import ClusterTopology
+        from repro.train import ScenarioInjector
+        topo = (ClusterTopology(**json.loads(args.topology))
+                if args.topology else
+                ClusterTopology(n_groups=args.replicas, hosts_per_group=1,
+                                hosts_per_rack=1))
+        injector = ScenarioInjector(
+            json.loads(args.failure_model), topo, n_groups=args.replicas,
+            seconds_per_step=args.seconds_per_step,
+            params=DESParams(n=args.replicas), seed=args.seed)
+
+    ckpt = None
+    if args.ckpt_dir:
+        from repro.ckpt import CheckpointManager
+        ckpt = CheckpointManager(args.ckpt_dir, n_groups=args.replicas,
+                                 redundancy=1, mtbf=1e6, t_save=1.0,
+                                 t_restart=1.0)
+
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    kwargs = dict(
+        n_slots=args.slots, page_size=args.page_size, max_new=args.max_new,
+        buckets=buckets,
+        n_pages=pool_pages_for(args.slots, max(buckets) + args.max_new,
+                               args.page_size))
+    return ReplicaServer(model, params, n_replicas=args.replicas,
+                         injector=injector, ckpt=ckpt, engine_kwargs=kwargs)
+
+
+def serve_and_measure(srv, requests):
+    """Drive the server to drain; return (finished, wall_seconds)."""
+    for req in requests:
+        srv.submit(req)
+    t0 = time.perf_counter()
+    done = srv.run()
+    return done, time.perf_counter() - t0
+
+
+def latency_stats(done):
+    lat = np.concatenate([d.latencies for d in done]) if done else \
+        np.zeros((0,))
+    tokens = int(sum(d.tokens.size for d in done))
+    return {
+        "tokens": tokens,
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3) if tokens
+        else None,
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3) if tokens
+        else None,
+    }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots per replica")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--buckets", default="8,16",
+                    help="prompt-length buckets (one prefill executable "
+                         "each; prompts are exact-length, never padded)")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--failure-model", default=None,
+                    help='failure-model JSON, e.g. \'{"kind": '
+                         '"correlated", "scope": "rack", ...}\'')
+    ap.add_argument("--topology", default=None,
+                    help="ClusterTopology JSON (defaults to one replica "
+                         "per rack)")
+    ap.add_argument("--seconds-per-step", type=float, default=100.0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="enables the wipe-out reload path")
+    ap.add_argument("--report-json", default=None)
     args = ap.parse_args()
 
+    import jax
+
     from repro.configs import smoke_config
+    from repro.data import RequestStream
     from repro.models import build_model
-    from repro.train import make_serve_step
 
     cfg = smoke_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
 
-    rng = np.random.default_rng(args.seed)
-    b = args.batch
-    s_max = args.prompt_len + args.tokens
-    state = model.init_decode_state(batch=b, s_max=s_max)
-    prompt = rng.integers(0, cfg.vocab, (b, args.prompt_len), dtype=np.int32)
-    embeds = (rng.normal(size=(b, 1, cfg.d_model)).astype(np.float32)
-              if cfg.frontend else None)
+    srv = build_server(args, cfg, model, params)
+    srv.warmup()
+    frozen = srv.recompiles
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    stream = RequestStream(cfg, buckets=buckets, max_new=args.max_new,
+                           seed=args.seed)
+    done, wall = serve_and_measure(srv, stream.requests(args.requests))
 
-    # prefill token-by-token through the decode path (cache-filling)
-    tok = jnp.asarray(prompt[:, :1])
-    for t in range(args.prompt_len):
-        logits, state = serve_step(
-            params, state, jnp.int32(t),
-            tokens=None if cfg.frontend else jnp.asarray(prompt[:, t:t + 1]),
-            embeds=None if not cfg.frontend else jnp.asarray(embeds))
-    next_tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1)[:, None]
+    stats = latency_stats(done)
+    report = {
+        "arch": args.arch,
+        **srv.report(),
+        **stats,
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(stats["tokens"] / wall, 2) if wall else None,
+        "requests": args.requests,
+        "completed_requests": len(done),
+    }
+    print(json.dumps(report, indent=1))
+    if args.report_json:
+        with open(args.report_json, "w") as fh:
+            json.dump(report, fh, indent=1)
 
-    t0 = time.time()
-    generated = [next_tok]
-    for t in range(args.prompt_len, s_max - 1):
-        logits, state = serve_step(
-            params, state, jnp.int32(t),
-            tokens=None if cfg.frontend else generated[-1],
-            embeds=None if not cfg.frontend else jnp.asarray(embeds))
-        generated.append(jnp.argmax(logits[:, :cfg.vocab], axis=-1)[:, None])
-    jax.block_until_ready(generated[-1])
-    dt = time.time() - t0
-    n_tok = b * len(generated)
-    out = np.concatenate([np.asarray(g) for g in generated], axis=1)
-    print(f"[serve] arch={args.arch} batch={b} generated "
-          f"{len(generated)} tokens/request in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s aggregate)")
-    print(f"[serve] sample: {out[0][:16].tolist()}")
+    assert len(done) == args.requests, (
+        f"dropped {args.requests - len(done)} requests")
+    assert srv.recompiles == frozen, (
+        f"recompiled after warmup: {srv.recompiles - frozen} misses")
 
 
 if __name__ == "__main__":

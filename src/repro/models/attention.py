@@ -23,6 +23,8 @@ from .layers import apply_rope, rmsnorm
 __all__ = [
     "attend_chunked", "gqa_forward", "gqa_decode", "mla_forward",
     "mla_decode", "KVCache", "MLACache", "init_gqa_cache", "init_mla_cache",
+    "init_gqa_pool", "init_mla_pool", "paged_view", "gqa_decode_paged",
+    "mla_decode_paged",
 ]
 
 _NEG_INF = -2.0 ** 20  # large-but-finite: keeps bf16/softmax NaN-free
@@ -108,7 +110,8 @@ def _qkv(x, p, cfg: ModelConfig):
 
 def gqa_forward(x: jax.Array, p: dict, cfg: ModelConfig,
                 positions: jax.Array | None = None,
-                chunk: int = 512, head_constrain=None) -> jax.Array:
+                chunk: int = 512, head_constrain=None,
+                return_kv: bool = False):
     """Full-sequence causal GQA. x: (B, S, D) -> (B, S, D).
 
     ``head_constrain`` pins (B, S, H, dh) tensors to head-sharding over
@@ -117,6 +120,12 @@ def gqa_forward(x: jax.Array, p: dict, cfg: ModelConfig,
     all-reduce the full (S x S) score tensors — measured 4.6 TB/step of
     avoidable all-reduce on starcoder2-7b (36 heads over TP=16); see
     EXPERIMENTS.md §Perf.
+
+    ``return_kv`` additionally returns the decode-cache contents — the
+    post-rope, pre-repeat ``KVCache(k, v)`` of shape (B, S, KV, dh) —
+    which is the fused cache-filling prefill: the k/v are the exact
+    tensors :func:`gqa_decode` would have written token by token, at
+    zero extra compute (they are byproducts of the forward).
     """
     b, s, _ = x.shape
     if positions is None:
@@ -124,6 +133,7 @@ def gqa_forward(x: jax.Array, p: dict, cfg: ModelConfig,
     q, k, v = _qkv(x, p, cfg)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    cache = KVCache(k, v) if return_kv else None
     n_rep = cfg.n_heads // cfg.n_kv_heads
     k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
     if head_constrain is not None:
@@ -131,7 +141,60 @@ def gqa_forward(x: jax.Array, p: dict, cfg: ModelConfig,
     out = attend_chunked(q, k, v, chunk=chunk)
     if head_constrain is not None:
         out = head_constrain(out)
-    return jnp.dot(out.reshape(b, s, -1), p["wo"])
+    y = jnp.dot(out.reshape(b, s, -1), p["wo"])
+    if return_kv:
+        return y, cache
+    return y
+
+
+def init_gqa_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    """Physical page pool for paged decode: (n_pages, PS, KV, dh) leaves.
+
+    Page 0 is reserved as the *trash page*: inactive decode slots carry an
+    all-zero block table and pos 0, so their per-step scatter lands there
+    and their gather reads it — garbage in, garbage out, fully masked.
+    The allocator must never hand out page 0.
+    """
+    dh = cfg.resolved_head_dim
+    shape = (n_pages, page_size, cfg.n_kv_heads, dh)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def init_mla_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                  dtype=jnp.bfloat16) -> MLACache:
+    """Physical page pool for paged MLA decode (compressed-latent rows)."""
+    return MLACache(
+        jnp.zeros((n_pages, page_size, cfg.kv_lora_rank), dtype),
+        jnp.zeros((n_pages, page_size, cfg.mla_d_rope), dtype),
+    )
+
+
+def paged_view(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather a logical per-sequence cache view from the physical pool.
+
+    pool: (n_pages, PS, *tail); table: (B, M) int32 page ids.
+    Returns (B, M*PS, *tail) — the contiguous cache each row *thinks* it
+    has. Rows past ``pos`` hold stale/trash data; callers mask them, and
+    softmax's exp underflows the _NEG_INF scores to exactly 0.0, so stale
+    pages are unreachable rather than merely unlikely.
+    """
+    b, m = table.shape
+    g = jnp.take(pool, table.reshape(-1), axis=0)
+    return g.reshape(b, m * pool.shape[1], *pool.shape[2:])
+
+
+def _paged_write(pool: jax.Array, new: jax.Array, table: jax.Array,
+                 pos: jax.Array) -> jax.Array:
+    """Scatter one new token row per sequence into its current page.
+
+    new: (B, *tail) — token ``pos[b]`` of row b. Distinct live sequences
+    own distinct pages so the scatter indices never collide except on the
+    trash page (0, 0), where last-write-wins is fine by construction.
+    """
+    ps = pool.shape[1]
+    page = jnp.take_along_axis(table, (pos // ps)[:, None], axis=1)[:, 0]
+    return pool.at[page, pos % ps].set(new)
 
 
 def gqa_decode(x: jax.Array, p: dict, cfg: ModelConfig, cache: KVCache,
@@ -161,6 +224,40 @@ def gqa_decode(x: jax.Array, p: dict, cfg: ModelConfig, cache: KVCache,
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vh)
     y = jnp.dot(out.reshape(b, 1, -1), p["wo"])
     return y, KVCache(k, v)
+
+
+def gqa_decode_paged(x: jax.Array, p: dict, cfg: ModelConfig,
+                     pool: KVCache, table: jax.Array,
+                     pos: jax.Array) -> tuple[jax.Array, KVCache]:
+    """One-token decode against a paged KV pool, per-row positions.
+
+    x: (B, 1, D); pool leaves: (n_pages, PS, KV, dh); table: (B, M)
+    physical page ids; pos: (B,) int32 — row b is generating token
+    ``pos[b]``. Unlike :func:`gqa_decode` (scalar pos, dense per-row
+    cache) every row advances independently, which is what continuous
+    batching needs: admissions and evictions only rewrite the block
+    table, never the compiled program.
+    """
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    q, k_new, v_new = _qkv(x, p, cfg)
+    posb = pos[:, None]                             # (B, 1)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    k_pool = _paged_write(pool.k, k_new[:, 0], table, pos)
+    v_pool = _paged_write(pool.v, v_new[:, 0], table, pos)
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kh = _repeat_kv(paged_view(k_pool, table), n_rep)   # (B, M*PS, H, dh)
+    vh = _repeat_kv(paged_view(v_pool, table), n_rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kh) * dh ** -0.5
+    valid = (jnp.arange(kh.shape[1])[None] <= pos[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores.astype(jnp.float32), _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vh)
+    y = jnp.dot(out.reshape(b, 1, -1), p["wo"])
+    return y, KVCache(k_pool, v_pool)
 
 
 # ------------------------------------------------------------------ #
@@ -225,8 +322,12 @@ def _mla_attend(q_nope, q_rope, c_kv, k_rope, p, cfg: ModelConfig,
     scores = scores.astype(jnp.float32) * (dn + cfg.mla_d_rope) ** -0.5
     if causal_pos is not None:
         qpos, kpos = causal_pos
-        mask = qpos[:, None] >= kpos[None, :]
-        scores = jnp.where(mask[None, None], scores, _NEG_INF)
+        if qpos.ndim == 2:
+            # per-row positions (B, Sq) — the paged-decode spelling
+            mask = (qpos[:, :, None] >= kpos[None, None, :])[:, None]
+        else:
+            mask = (qpos[:, None] >= kpos[None, :])[None, None]
+        scores = jnp.where(mask, scores, _NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q_nope.dtype)
     o_lat = jnp.einsum("bhqk,bkl->bqhl", probs, c_kv)   # latent values
     out = jnp.einsum("bqhl,lhd->bqhd", o_lat, wv)       # expand via W_uv
@@ -235,8 +336,13 @@ def _mla_attend(q_nope, q_rope, c_kv, k_rope, p, cfg: ModelConfig,
 
 def mla_forward(x: jax.Array, p: dict, cfg: ModelConfig,
                 positions: jax.Array | None = None,
-                chunk: int = 512) -> jax.Array:
-    """Full-sequence causal MLA. Query-chunked like the GQA path."""
+                chunk: int = 512, return_kv: bool = False):
+    """Full-sequence causal MLA. Query-chunked like the GQA path.
+
+    ``return_kv`` additionally returns ``MLACache(c_kv, k_rope)`` — the
+    exact compressed rows :func:`mla_decode` would have cached token by
+    token (fused cache-filling prefill, zero extra compute).
+    """
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
@@ -256,7 +362,10 @@ def mla_forward(x: jax.Array, p: dict, cfg: ModelConfig,
 
     out = jax.lax.map(one_chunk, jnp.arange(n_chunks))
     out = out.transpose(1, 0, 2, 3).reshape(b, s, -1)
-    return jnp.dot(out, p["wo"])
+    y = jnp.dot(out, p["wo"])
+    if return_kv:
+        return y, MLACache(c_kv, k_rope)
+    return y
 
 
 def mla_decode(x: jax.Array, p: dict, cfg: ModelConfig, cache: MLACache,
@@ -274,3 +383,23 @@ def mla_decode(x: jax.Array, p: dict, cfg: ModelConfig, cache: MLACache,
     kpos = jnp.arange(s_max)
     out = _mla_attend(q_nope, q_rope, c_kv, k_rope, p, cfg, (qpos, kpos))
     return jnp.dot(out, p["wo"]), MLACache(c_kv, k_rope)
+
+
+def mla_decode_paged(x: jax.Array, p: dict, cfg: ModelConfig,
+                     pool: MLACache, table: jax.Array,
+                     pos: jax.Array) -> tuple[jax.Array, MLACache]:
+    """One-token MLA decode against a paged compressed-latent pool.
+
+    Same contract as :func:`gqa_decode_paged`: table (B, M) page ids,
+    pos (B,) per-row positions, page 0 is the trash page.
+    """
+    posb = pos[:, None]                             # (B, 1)
+    q_nope, q_rope = _mla_q(x, p, cfg, posb)
+    c_new, kr_new = _mla_kv(x, p, cfg, posb)
+    c_pool = _paged_write(pool.c_kv, c_new[:, 0], table, pos)
+    r_pool = _paged_write(pool.k_rope, kr_new[:, 0], table, pos)
+    c_kv = paged_view(c_pool, table)                # (B, M*PS, lora)
+    k_rope = paged_view(r_pool, table)
+    kpos = jnp.arange(c_kv.shape[1])
+    out = _mla_attend(q_nope, q_rope, c_kv, k_rope, p, cfg, (posb, kpos))
+    return jnp.dot(out, p["wo"]), MLACache(c_pool, r_pool)

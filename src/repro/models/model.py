@@ -313,6 +313,42 @@ class Model:
             x = x + y
         return self._mlp_part(x, p, kind), cache
 
+    def _block_prefill(self, x, p, kind, positions):
+        """Forward one block AND capture its decode cache (fused prefill)."""
+        cfg = self.cfg
+        mixer = kind.partition("_")[0]
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if mixer == "attn":
+            if cfg.attn_kind == "mla":
+                y, cache = attn.mla_forward(h, p["attn"], cfg, positions,
+                                            chunk=self.attn_chunk,
+                                            return_kv=True)
+            else:
+                hc = None
+                if self.mesh is not None:
+                    hc = lambda t: self._constrain(t, None, "model", None)
+                y, cache = attn.gqa_forward(h, p["attn"], cfg, positions,
+                                            chunk=self.attn_chunk,
+                                            head_constrain=hc, return_kv=True)
+        else:
+            y, cache = ssm_mod.mamba_forward(h, p["mamba"], cfg,
+                                             return_cache=True)
+        return self._mlp_part(x + y, p, kind), cache
+
+    def _block_decode_paged(self, x, p, kind, cache, table, pos):
+        cfg = self.cfg
+        mixer = kind.partition("_")[0]
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if mixer == "attn":
+            dec = (attn.mla_decode_paged if cfg.attn_kind == "mla"
+                   else attn.gqa_decode_paged)
+            y, cache = dec(h, p["attn"], cfg, cache, table, pos)
+        else:
+            # SSD state is O(1) per sequence — the slot IS the page; the
+            # dense decode path already advances every row independently
+            y, cache = ssm_mod.mamba_decode(h, p["mamba"], cfg, cache)
+        return self._mlp_part(x + y, p, kind), cache
+
     # ---------------- forward / loss ---------------- #
     def forward(self, params: dict, tokens: jax.Array | None = None,
                 embeds: jax.Array | None = None) -> jax.Array:
@@ -353,6 +389,50 @@ class Model:
         logits = self.forward(params, tokens=batch.get("tokens"),
                               embeds=batch.get("embeds"))
         return cross_entropy(logits, batch["labels"])
+
+    # ---------------- prefill ---------------- #
+    def prefill(self, params: dict, tokens: jax.Array | None = None,
+                embeds: jax.Array | None = None) -> tuple[jax.Array, list]:
+        """Fused cache-filling prefill.
+
+        Runs the full forward once and returns ``(logits (B, S, V),
+        state)`` where ``state`` matches :meth:`init_decode_state`
+        (batch=B, s_max=S) leaf for leaf — the per-layer caches are
+        byproducts of the forward (post-rope k/v, compressed MLA rows,
+        conv tails + final SSD states), so prefill costs one forward, not
+        S decode steps. Feed *exact-length* prompts: the SSD recurrence
+        runs through every input token, so right-padding corrupts the
+        state (the serve engine jits one executable per prompt-length
+        bucket for this reason).
+        """
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(ACT_DTYPE)
+        else:
+            assert tokens is not None
+            x = embed_lookup(params["embed"], tokens)
+        x = self._constrain(x)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        states = []
+        for (pattern, n_rep), seg in zip(segments_of(cfg), params["segments"]):
+            def body(xc, layer_p):
+                caches = []
+                for kind, bp in zip(pattern, layer_p):
+                    xc, c = self._block_prefill(xc, bp, kind, positions)
+                    caches.append(c)
+                return self._constrain(xc), tuple(caches)
+            # scan ys stack the per-layer caches with a leading n_rep axis
+            # — exactly the init_decode_state layout
+            x, seg_cache = jax.lax.scan(body, x, seg)
+            states.append(seg_cache)
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = self._mask_pad(jnp.dot(x, head))
+        return self._constrain(logits, None, "model"), states
 
     # ---------------- decode ---------------- #
     def init_decode_state(self, batch: int, s_max: int) -> list:
@@ -396,6 +476,74 @@ class Model:
                 new_c = []
                 for kind, bp, c in zip(pattern, layer_p, layer_c):
                     xc, nc = self._block_decode(xc, bp, kind, c, pos)
+                    new_c.append(nc)
+                return xc, tuple(new_c)
+            x, new_cache = jax.lax.scan(body, x, (seg, seg_cache))
+            new_states.append(new_cache)
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        return self._mask_pad(jnp.dot(x, head)), new_states
+
+    # ---------------- paged decode ---------------- #
+    def init_paged_state(self, n_slots: int, n_pages: int,
+                         page_size: int) -> list:
+        """Paged decode state: per-layer physical page pools.
+
+        Attention caches become page pools ``(n_rep, n_pages, PS, ...)``
+        shared by all decode slots; Mamba caches stay slot-dense
+        ``(n_rep, n_slots, ...)`` because SSD state is O(1) per sequence
+        (the slot is the page). One ``(n_slots, max_pages)`` int32 block
+        table — managed host-side by ``repro.serve.kvcache`` — addresses
+        every layer's pools identically; page 0 is the trash page.
+        """
+        cfg = self.cfg
+        states = []
+        for pattern, n_rep in segments_of(cfg):
+            per_pos = []
+            for kind in pattern:
+                mixer = kind.partition("_")[0]
+                if mixer == "attn":
+                    c = (attn.init_mla_pool(cfg, n_pages, page_size)
+                         if cfg.attn_kind == "mla"
+                         else attn.init_gqa_pool(cfg, n_pages, page_size))
+                else:
+                    c = ssm_mod.init_mamba_cache(cfg, n_slots)
+                per_pos.append(jax.tree.map(
+                    lambda t: jnp.broadcast_to(t[None], (n_rep, *t.shape)), c))
+            states.append(tuple(per_pos))
+        return states
+
+    def decode_step_paged(self, params: dict, state: list,
+                          table: jax.Array, pos: jax.Array,
+                          tokens: jax.Array | None = None,
+                          embeds: jax.Array | None = None
+                          ) -> tuple[jax.Array, list]:
+        """One-token step over paged pools, per-row positions.
+
+        tokens (B, 1) or embeds (B, 1, D); table (B, max_pages) int32
+        physical page ids; pos (B,) int32 — row b generates token
+        ``pos[b]``. B is the fixed decode-slot count: admission and
+        eviction change only table/pos *data*, never this program, which
+        is what keeps continuous batching recompile-free.
+        """
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(ACT_DTYPE)
+        else:
+            assert tokens is not None
+            x = embed_lookup(params["embed"], tokens)
+        x = self._constrain(x)
+
+        new_states = []
+        for (pattern, n_rep), seg, seg_cache in zip(
+                segments_of(cfg), params["segments"], state):
+            def body(xc, inp):
+                layer_p, layer_c = inp
+                new_c = []
+                for kind, bp, c in zip(pattern, layer_p, layer_c):
+                    xc, nc = self._block_decode_paged(
+                        xc, bp, kind, c, table, pos)
                     new_c.append(nc)
                 return xc, tuple(new_c)
             x, new_cache = jax.lax.scan(body, x, (seg, seg_cache))

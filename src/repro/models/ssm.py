@@ -171,8 +171,17 @@ def _broadcast_groups(t: jax.Array, n_heads: int, s: SSMConfig) -> jax.Array:
 
 def mamba_forward(x: jax.Array, p: dict, cfg: ModelConfig,
                   state0: jax.Array | None = None,
-                  return_state: bool = False):
-    """Full-sequence Mamba-2 mixer. x (B,S,D) -> (B,S,D)."""
+                  return_state: bool = False,
+                  return_cache: bool = False):
+    """Full-sequence Mamba-2 mixer. x (B,S,D) -> (B,S,D).
+
+    ``return_cache`` returns ``(out, MambaCache(conv_tail, final_state))``
+    — the exact cache :func:`mamba_decode` would hold after consuming the
+    sequence token by token: the last W-1 raw ``conv_in`` rows plus the
+    final SSD state (fused cache-filling prefill). NB: unlike attention,
+    the SSD recurrence runs *through* every input token, so callers must
+    feed exact-length prompts — right-padding would corrupt the state.
+    """
     s = cfg.ssm
     assert s is not None
     bsz, seq, _ = x.shape
@@ -203,6 +212,11 @@ def mamba_forward(x: jax.Array, p: dict, cfg: ModelConfig,
     y = y * jax.nn.silu(z)
     y = rmsnorm(y, p["gate_norm"], cfg.norm_eps)
     out = jnp.dot(y, p["out_proj"])
+    if return_cache:
+        pad = jnp.zeros((bsz, s.conv_width - 1, conv_in.shape[-1]),
+                        conv_in.dtype)
+        tail = jnp.concatenate([pad, conv_in], axis=1)[:, -(s.conv_width - 1):]
+        return out, MambaCache(tail.astype(jnp.bfloat16), final)
     if return_state:
         return out, final
     return out

@@ -1,0 +1,312 @@
+"""Continuous-batching decode engine over the paged KV cache.
+
+One :class:`ServeEngine` drives one serving replica: a queue of
+:class:`~repro.data.pipeline.ServeRequest`, a fixed set of decode slots,
+and the paged pools from :meth:`Model.init_paged_state`. Per
+:meth:`step`:
+
+1. **admit** — while a slot and enough pages are free, pop a request,
+   run the fused cache-filling prefill (one forward — the satellite fix
+   to ``make_prefill``), scatter its dense cache into the pools
+   (:func:`~repro.serve.kvcache.make_cache_writer`), and seed the slot
+   with the prefill's first generated token;
+2. **decode** — one ``make_serve_step(paged=True)`` call advances every
+   slot one token (inactive slots spin on the trash page);
+3. **evict** — slots that reached ``max_new`` free their pages and emit
+   a :class:`FinishedRequest`; the freed capacity admits new requests on
+   the next step.
+
+Everything device-side is AOT-compiled through a shared
+:class:`ExecutableCache` — the per-S_A executable-cache idiom of
+:class:`repro.exec.executor.MeshExecutor` transplanted to serving. Keys
+are ``("decode",)`` and ``("prefill", L)`` / ``("write", L)`` per
+prompt-length bucket; :meth:`ServeEngine.warmup` populates them all, and
+because admissions, evictions, and SPARe replica re-weighting are pure
+host-side data, ``cache.misses`` is provably frozen afterwards — the
+no-recompile acceptance gate asserts exactly this counter. AOT (``jit
+-> lower -> compile``) rather than plain ``jit`` so an accidental shape
+change errors loudly instead of silently recompiling.
+
+Prompts are *exact-length* per bucket (no right-padding): the SSM
+prefill runs its recurrence through every input token, so padding would
+corrupt the state (see :meth:`Model.prefill`).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import ServeRequest
+from repro.models.model import Model
+from repro.train.step import make_prefill, make_serve_step
+
+from .kvcache import BlockAllocator, make_cache_writer, pages_needed
+
+__all__ = ["ExecutableCache", "FinishedRequest", "ServeEngine"]
+
+
+class ExecutableCache:
+    """AOT executables keyed by (kind, *bucket); shared across replicas.
+
+    ``misses`` counts compilations; after :meth:`ServeEngine.warmup` it
+    must stay frozen through any failure/re-weight sequence (the
+    acceptance gate). Shared by every replica engine of a
+    :class:`~repro.serve.replicas.ReplicaServer` so a request re-routed
+    to a survivor hits the same executables.
+    """
+
+    def __init__(self):
+        self._exe: dict[tuple, object] = {}
+        self.misses = 0
+        self.hits = 0
+
+    def get(self, key: tuple, build):
+        exe = self._exe.get(key)
+        if exe is None:
+            self.misses += 1
+            exe = self._exe[key] = build()
+        else:
+            self.hits += 1
+        return exe
+
+    @property
+    def keys(self) -> list[tuple]:
+        return sorted(self._exe)
+
+
+@dataclass
+class FinishedRequest:
+    """A completed request: generated ids + per-token latencies."""
+
+    req_id: int
+    prompt_len: int
+    tokens: np.ndarray                    # (max_new,) int32 generated ids
+    latencies: np.ndarray                 # (max_new,) seconds per token
+    admitted_step: int
+    finished_step: int
+
+
+@dataclass
+class _Slot:
+    request: ServeRequest
+    pages: list[int]
+    generated: list[int] = field(default_factory=list)
+    latencies: list[float] = field(default_factory=list)
+    admitted_step: int = 0
+
+
+class ServeEngine:
+    """One replica's continuous-batching loop (host control plane)."""
+
+    def __init__(self, model: Model, params, *, n_slots: int,
+                 n_pages: int, page_size: int, max_new: int,
+                 buckets: tuple[int, ...],
+                 exec_cache: ExecutableCache | None = None):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.max_new = max_new
+        self.buckets = tuple(sorted(buckets))
+        self.cache = exec_cache if exec_cache is not None else ExecutableCache()
+
+        # worst case: longest bucket + full generation budget
+        self.max_pages = pages_needed(self.buckets[-1] + max_new, page_size)
+        self.alloc = BlockAllocator(n_pages, page_size)
+        self.pools = model.init_paged_state(n_slots, n_pages, page_size)
+        self._writer = make_cache_writer(model)
+
+        # host-side slot arrays (the compiled step's data plane)
+        self.table = np.zeros((n_slots, self.max_pages), np.int32)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.next_tok = np.zeros((n_slots,), np.int32)
+        self.slots: list[_Slot | None] = [None] * n_slots
+
+        self.queue: deque[ServeRequest] = deque()
+        self.step_idx = 0
+        self.admitted = 0
+        self.completed = 0
+
+    # ------------------------------------------------------------- #
+    # executables                                                    #
+    # ------------------------------------------------------------- #
+    def _decode_exe(self):
+        def build():
+            fn = make_serve_step(self.model, paged=True)
+            args = (self.params, self.pools,
+                    jnp.asarray(self.table), jnp.asarray(self.pos),
+                    jnp.asarray(self.next_tok[:, None]))
+            return jax.jit(
+                lambda p, s, t, pos, tok: fn(p, s, t, pos, tokens=tok),
+                donate_argnums=(1,)).lower(*args).compile()
+        return self.cache.get(("decode",), build)
+
+    def _prefill_exe(self, length: int):
+        if length not in self.buckets:
+            raise ValueError(f"prompt length {length} not in buckets "
+                             f"{self.buckets}")
+
+        def build():
+            fn = make_prefill(self.model, return_cache=True)
+            toks = jnp.zeros((1, length), jnp.int32)
+            return jax.jit(
+                lambda p, t: fn(p, tokens=t)).lower(
+                    self.params, toks).compile()
+        return self.cache.get(("prefill", length), build)
+
+    def _write_exe(self, length: int):
+        n_alloc = pages_needed(length + self.max_new, self.page_size)
+
+        def build():
+            dense = jax.eval_shape(
+                lambda: self.model.init_decode_state(1, length))
+            dense = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), dense)
+            pages = jnp.zeros((n_alloc,), jnp.int32)
+            return jax.jit(self._writer, donate_argnums=(0,)).lower(
+                self.pools, dense, pages, jnp.int32(0)).compile()
+        return self.cache.get(("write", length), build)
+
+    def warmup(self) -> None:
+        """Compile every executable this engine can ever need. After
+        this, ``cache.misses`` is frozen — any later compile is a bug."""
+        self._decode_exe()
+        for length in self.buckets:
+            self._prefill_exe(length)
+            self._write_exe(length)
+
+    # ------------------------------------------------------------- #
+    # request flow                                                   #
+    # ------------------------------------------------------------- #
+    def submit(self, req: ServeRequest) -> None:
+        if req.prompt_len not in self.buckets:
+            raise ValueError(f"prompt length {req.prompt_len} not in "
+                             f"buckets {self.buckets}")
+        if req.max_new > self.max_new:
+            raise ValueError(f"max_new {req.max_new} > engine budget "
+                             f"{self.max_new}")
+        self.queue.append(req)
+
+    @property
+    def in_flight(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def drain_requests(self) -> list[ServeRequest]:
+        """Pull every queued AND in-flight request out of this engine
+        (replica death): in-flight sequences restart from their prompt —
+        greedy decode makes the requeued output bit-identical, so a
+        failure costs latency, never correctness. Pages are freed; pools
+        keep their (now unreachable) contents."""
+        out = list(self.queue)
+        self.queue.clear()
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            self.alloc.free(slot.pages)
+            self._clear_slot(i)
+            out.append(slot.request)
+        out.sort(key=lambda r: r.req_id)
+        return out
+
+    def _clear_slot(self, i: int) -> None:
+        self.slots[i] = None
+        self.table[i] = 0
+        self.pos[i] = 0
+        self.next_tok[i] = 0
+
+    # ------------------------------------------------------------- #
+    # the loop                                                       #
+    # ------------------------------------------------------------- #
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if not self.queue or self.slots[i] is not None:
+                continue
+            req = self.queue[0]
+            total = req.prompt_len + self.max_new
+            if not self.alloc.can_alloc(total):
+                break                      # FIFO: don't starve the head
+            self.queue.popleft()
+            pages = self.alloc.alloc(total)
+            length = req.prompt_len
+
+            t0 = time.perf_counter()
+            logits, dense = self._prefill_exe(length)(
+                self.params, jnp.asarray(req.tokens[None, :]))
+            self.pools = self._write_exe(length)(
+                self.pools, dense, jnp.asarray(pages, jnp.int32),
+                jnp.int32(i))
+            first = int(np.argmax(
+                np.asarray(logits[0, -1, :self.model.cfg.vocab])))
+            dt = time.perf_counter() - t0
+
+            slot = _Slot(request=req, pages=pages,
+                         admitted_step=self.step_idx)
+            slot.generated.append(first)
+            slot.latencies.append(dt)
+            self.slots[i] = slot
+            self.table[i] = 0
+            self.table[i, :len(pages)] = pages
+            self.pos[i] = length
+            self.next_tok[i] = first
+            self.admitted += 1
+
+    def _evict_finished(self) -> list[FinishedRequest]:
+        done = []
+        for i, slot in enumerate(self.slots):
+            if slot is None or len(slot.generated) < slot.request.max_new:
+                continue
+            self.alloc.free(slot.pages)
+            self._clear_slot(i)
+            self.completed += 1
+            done.append(FinishedRequest(
+                req_id=slot.request.req_id,
+                prompt_len=slot.request.prompt_len,
+                tokens=np.asarray(
+                    slot.generated[:slot.request.max_new], np.int32),
+                latencies=np.asarray(
+                    slot.latencies[:slot.request.max_new], np.float64),
+                admitted_step=slot.admitted_step,
+                finished_step=self.step_idx))
+        return done
+
+    def step(self) -> list[FinishedRequest]:
+        """One engine tick: admit, decode one token everywhere, evict."""
+        self._admit()
+        done = self._evict_finished()      # max_new == 1 finishes here
+
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if active:
+            t0 = time.perf_counter()
+            logits, self.pools = self._decode_exe()(
+                self.params, self.pools, jnp.asarray(self.table),
+                jnp.asarray(self.pos), jnp.asarray(self.next_tok[:, None]))
+            toks = np.argmax(
+                np.asarray(logits[:, :self.model.cfg.vocab]), axis=-1)
+            dt = time.perf_counter() - t0
+            for i in active:
+                slot = self.slots[i]
+                slot.generated.append(int(toks[i]))
+                slot.latencies.append(dt)
+                self.pos[i] += 1
+                self.next_tok[i] = int(toks[i])
+            done += self._evict_finished()
+
+        self.step_idx += 1
+        return done
+
+    def run(self, max_steps: int = 10_000) -> list[FinishedRequest]:
+        """Step until queue and slots drain (or ``max_steps``)."""
+        out = []
+        for _ in range(max_steps):
+            if not self.queue and self.in_flight == 0:
+                break
+            out += self.step()
+        return out

@@ -1,0 +1,204 @@
+"""SPARe-masked serving replicas over the cluster topology.
+
+The serving half of the paper's thesis: a failure is **pure weight-table
+data**. A :class:`ReplicaServer` maps R serving replicas onto
+:class:`~repro.scenarios.topology.ClusterTopology` host groups (replica
+r = group r, so rack/pod blast radii resolve exactly as they do for
+training) and tracks liveness in a ``SpareState(R, 1)``. Request routing
+is smooth weighted round-robin over the SPARe supplier-style weight
+table ``alive / alive.sum()`` — when a replica dies:
+
+* its weight drops to 0 and survivors absorb its share — a host-side
+  array edit, **no recompile**: all replicas share one
+  :class:`~repro.serve.engine.ExecutableCache`, whose ``misses`` counter
+  is frozen after warmup (the acceptance gate asserts this through a
+  rack-burst campaign);
+* its queued *and in-flight* requests requeue onto survivors from their
+  prompts — the counter-based :class:`~repro.data.pipeline.RequestStream`
+  plus greedy decode make the re-run bit-identical, so zero requests are
+  dropped while any replica survives;
+* wipe-out (every replica dead — e.g. a rack that hosts all of them)
+  falls back to reload-from-checkpoint via
+  :class:`~repro.ckpt.checkpoint.CheckpointManager` exactly like the
+  trainer: ``restore_latest`` the params, rebuild the engines, requeue
+  everything, ``injector.notify_wipeout()`` to account the outage.
+
+Failures arrive through the same
+:class:`~repro.train.injection.ScenarioInjector` bridge the trainer
+uses (``poll(state) -> [StepEvent]`` with topology-resolved victim
+sets); configure it with ``n_groups == n_replicas``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.state import SpareState
+from repro.data.pipeline import ServeRequest
+from repro.models.model import Model
+from repro.scenarios.topology import ClusterTopology
+
+from .engine import ExecutableCache, FinishedRequest, ServeEngine
+
+__all__ = ["ReplicaServer", "ReplicaEvent"]
+
+
+@dataclass
+class ReplicaEvent:
+    """One liveness transition, for reports/tests."""
+
+    step: int
+    kind: str                              # "kill" | "wipeout"
+    victims: list[int] = field(default_factory=list)
+    requeued: int = 0
+
+
+class ReplicaServer:
+    """R serving replicas with SPARe weight-table failure masking."""
+
+    def __init__(self, model: Model, params, *, n_replicas: int,
+                 topology: ClusterTopology | None = None,
+                 injector=None, ckpt=None, engine_kwargs: dict):
+        self.model = model
+        self.params = params
+        self.topology = topology
+        self.injector = injector
+        self.ckpt = ckpt
+        self.spare = SpareState(n_replicas, 1)
+        self.exec_cache = ExecutableCache()
+        self.engine_kwargs = dict(engine_kwargs)
+        self.engines = [self._new_engine() for _ in range(n_replicas)]
+        # smooth weighted round-robin credits over the weight table
+        self._credits = np.zeros(n_replicas, np.float64)
+        self.step_idx = 0
+        self.events: list[ReplicaEvent] = []
+        self.dropped = 0                   # must stay 0 unless wiped out
+        if ckpt is not None:
+            # durable base image for the wipe-out path
+            ckpt.maybe_save(0, params, block=True, force=True)
+
+    def _new_engine(self) -> ServeEngine:
+        return ServeEngine(self.model, self.params,
+                           exec_cache=self.exec_cache, **self.engine_kwargs)
+
+    # ------------------------------------------------------------- #
+    # weight table + routing                                         #
+    # ------------------------------------------------------------- #
+    @property
+    def weights(self) -> np.ndarray:
+        """SPARe-style masking weights: a dead replica's traffic share is
+        re-distributed to survivors by zeroing its entry — data, not
+        program."""
+        alive = self.spare.alive.astype(np.float64)
+        total = alive.sum()
+        return alive / total if total else alive
+
+    @property
+    def recompiles(self) -> int:
+        return self.exec_cache.misses
+
+    def warmup(self) -> None:
+        for eng in self.engines:
+            eng.warmup()
+
+    def submit(self, req: ServeRequest) -> None:
+        self._route(req)
+
+    def _route(self, req: ServeRequest) -> None:
+        w = self.weights
+        if not w.any():
+            # wiped out mid-recovery: park on replica 0's queue; the
+            # wipe-out reload requeues it properly
+            self.engines[0].submit(req)
+            return
+        self._credits += w
+        pick = int(np.argmax(np.where(self.spare.alive, self._credits,
+                                      -np.inf)))
+        self._credits[pick] -= 1.0
+        self.engines[pick].submit(req)
+
+    # ------------------------------------------------------------- #
+    # failure handling                                               #
+    # ------------------------------------------------------------- #
+    def _kill(self, victims: list[int]) -> int:
+        requeued = []
+        for v in victims:
+            if not self.spare.alive[v]:
+                continue
+            self.spare.alive[v] = False
+            self._credits[v] = 0.0
+            requeued += self.engines[v].drain_requests()
+        for req in sorted(requeued, key=lambda r: r.req_id):
+            self._route(req)
+        return len(requeued)
+
+    def _wipeout(self) -> int:
+        """Every replica dead: reload params, rebuild engines, requeue."""
+        pending: list[ServeRequest] = []
+        for eng in self.engines:
+            pending += eng.drain_requests()
+        if self.injector is not None:
+            self.injector.notify_wipeout()
+        if self.ckpt is not None:
+            _, self.params = self.ckpt.restore_latest(self.params)
+        self.spare.reset()
+        self._credits[:] = 0.0
+        self.engines = [self._new_engine() for _ in self.engines]
+        # fresh pools over restored params; executables are shape-keyed
+        # so the shared cache still hits — a wipe-out reload does not
+        # recompile either
+        for req in sorted(pending, key=lambda r: r.req_id):
+            self._route(req)
+        return len(pending)
+
+    # ------------------------------------------------------------- #
+    # the loop                                                       #
+    # ------------------------------------------------------------- #
+    def step(self) -> list[FinishedRequest]:
+        """One server tick: deliver failures, mask, drive live engines."""
+        if self.injector is not None:
+            for ev in self.injector.poll(self.spare):
+                n = self._kill(ev.victims)
+                self.events.append(ReplicaEvent(
+                    step=self.step_idx, kind="kill",
+                    victims=list(ev.victims), requeued=n))
+            if not self.spare.alive.any():
+                n = self._wipeout()
+                self.events.append(ReplicaEvent(
+                    step=self.step_idx, kind="wipeout", requeued=n))
+
+        done: list[FinishedRequest] = []
+        for r in np.flatnonzero(self.spare.alive):
+            done += self.engines[int(r)].step()
+        self.step_idx += 1
+        return done
+
+    def run(self, max_steps: int = 10_000) -> list[FinishedRequest]:
+        """Step until every submitted request completes."""
+        out: list[FinishedRequest] = []
+        for _ in range(max_steps):
+            if not any(eng.pending or eng.in_flight
+                       for eng in self.engines):
+                break
+            out += self.step()
+        return out
+
+    # ------------------------------------------------------------- #
+    @property
+    def pending(self) -> int:
+        return sum(eng.pending + eng.in_flight for eng in self.engines)
+
+    def report(self) -> dict:
+        return {
+            "replicas": len(self.engines),
+            "alive": int(self.spare.alive.sum()),
+            "weights": self.weights.tolist(),
+            "steps": self.step_idx,
+            "admitted": sum(e.admitted for e in self.engines),
+            "completed": sum(e.completed for e in self.engines),
+            "recompiles": self.recompiles,
+            "executables": [list(k) for k in self.exec_cache.keys],
+            "events": [(e.step, e.kind, e.victims, e.requeued)
+                       for e in self.events],
+        }

@@ -150,9 +150,27 @@ def make_train_step(model: Model, *, base_lr: float = 3e-4,
     return train_step_ef if stateful else train_step
 
 
-def make_serve_step(model: Model):
-    """One-token decode step: (params, state, pos, tokens/embeds) ->
-    (next_token_logits, new_state). Greedy sampling left to the caller."""
+def make_serve_step(model: Model, *, paged: bool = False):
+    """One-token decode step. Greedy sampling left to the caller.
+
+    Default (dense): ``(params, state, pos, tokens/embeds) ->
+    (next_token_logits, new_state)`` with scalar ``pos`` — every row at
+    the same position (the dry-run/analyze spelling).
+
+    ``paged=True``: ``(params, state, table, pos, tokens/embeds)`` with
+    ``table (B, max_pages)`` page ids and ``pos (B,)`` per-row positions
+    over :meth:`Model.init_paged_state` pools — the continuous-batching
+    spelling (``repro.serve.engine``), where admission/eviction are pure
+    data and the step compiles exactly once.
+    """
+    if paged:
+        def serve_step_paged(params, state, table, pos,
+                             tokens=None, embeds=None):
+            logits, new_state = model.decode_step_paged(
+                params, state, table, pos, tokens=tokens, embeds=embeds)
+            return logits[:, -1, :], new_state
+
+        return serve_step_paged
 
     def serve_step(params, state, pos, tokens=None, embeds=None):
         logits, new_state = model.decode_step(
@@ -162,10 +180,25 @@ def make_serve_step(model: Model):
     return serve_step
 
 
-def make_prefill(model: Model):
-    """Batched prefill: run the full prompt through the train forward and
-    return last-position logits (cache-filling fused prefill is the serve
-    driver's job; the dry-run lowers this exact computation)."""
+def make_prefill(model: Model, *, return_cache: bool = False):
+    """Batched prefill.
+
+    Default: run the full prompt through the train forward and return
+    last-position logits only (the dry-run lowers this exact
+    computation; no cache materializes).
+
+    ``return_cache=True``: the fused cache-filling prefill —
+    ``(params, tokens/embeds) -> (all_logits (B, S, V), state)`` where
+    ``state`` matches :meth:`Model.init_decode_state` leaf for leaf, so
+    decode can continue from position S without re-running the prompt
+    token by token. Prompts must be exact-length (no right-padding): the
+    SSM recurrence runs through every input token.
+    """
+    if return_cache:
+        def prefill_cached(params, tokens=None, embeds=None):
+            return model.prefill(params, tokens=tokens, embeds=embeds)
+
+        return prefill_cached
 
     def prefill(params, tokens=None, embeds=None):
         logits = model.forward(params, tokens=tokens, embeds=embeds)

@@ -1,0 +1,398 @@
+"""Serving-tier tests: fused prefill, paged KV cache, continuous
+batching, SPARe replica masking.
+
+Layers, bottom-up:
+
+* decode-vs-forward parity for EVERY archetype — the oracle the engine
+  rides on (token-by-token ``make_serve_step`` vs one ``model.forward``);
+* fused prefill: logits equal the forward's, the returned cache is
+  leaf-compatible with ``init_decode_state`` and hands off to decode
+  bit-exactly (including the SSM exact-length subtlety);
+* paged pools: block alloc/free determinism, paged decode == dense
+  decode, no cross-sequence leakage even from a fully dirtied pool;
+* engine: continuous batching completes everything and matches the
+  dense-decode oracle, with the executable cache frozen after warmup;
+* replicas: a rack-burst campaign drops zero requests, produces
+  bit-identical outputs to the healthy run, and never recompiles;
+  wipe-out reloads from the checkpoint tier;
+* (spmd) masked-vs-unmasked replica decode programs share one
+  collective schedule on the 8-device emulated mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.data import RequestStream
+from repro.models.model import build_model
+from repro.serve import (BlockAllocator, ServeEngine, ReplicaServer,
+                         pages_needed, pool_pages_for)
+from repro.train import make_prefill, make_serve_step
+
+ARCH_IDS = sorted(ARCHS)
+# one per attention/mixer archetype: GQA, MLA, pure SSM, hybrid
+CORE_IDS = ["qwen2.5-3b", "deepseek-v2-lite-16b", "mamba2-1.3b",
+            "jamba-v0.1-52b"]
+
+_MODELS: dict[str, tuple] = {}
+
+
+def _model(arch):
+    """Module-level cache: params init and jit warmup dominate runtime."""
+    if arch not in _MODELS:
+        cfg = smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        _MODELS[arch] = (cfg, model, params)
+    return _MODELS[arch]
+
+
+def _f32(x):
+    return np.asarray(x, np.float32)
+
+
+# ------------------------------------------------------------------ #
+# decode-vs-forward parity (the serving oracle)                      #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Token-by-token serve_step reproduces the train forward's logits
+    at every position, for every model archetype."""
+    cfg, model, params = _model(arch)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    ref = _f32(model.forward(params, tokens=toks))
+
+    serve = jax.jit(make_serve_step(model))
+    state = model.init_decode_state(B, S)
+    for t in range(S):
+        logits, state = serve(params, state, jnp.int32(t),
+                              tokens=toks[:, t:t + 1])
+        np.testing.assert_allclose(
+            _f32(logits), ref[:, t], atol=2e-2, rtol=2e-2,
+            err_msg=f"{arch}: decode diverges from forward at pos {t}")
+
+
+# ------------------------------------------------------------------ #
+# fused cache-filling prefill                                        #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("arch", CORE_IDS)
+def test_prefill_logits_and_cache_layout(arch):
+    cfg, model, params = _model(arch)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab)
+
+    ref = model.forward(params, tokens=toks)
+    logits, state = make_prefill(model, return_cache=True)(
+        params, tokens=toks)
+    # same computation, same rounding: exactly the forward's logits
+    np.testing.assert_array_equal(_f32(logits), _f32(ref))
+
+    ref_state = model.init_decode_state(B, S)
+    assert (jax.tree.structure(state) == jax.tree.structure(ref_state))
+    for got, want in zip(jax.tree.leaves(state), jax.tree.leaves(ref_state)):
+        assert got.shape == want.shape and got.dtype == want.dtype
+
+
+def test_prefill_default_stays_logits_only():
+    """dryrun/analyze compatibility: the no-kwargs path returns only
+    last-position logits, and they agree with the cached variant."""
+    cfg, model, params = _model("qwen2.5-3b")
+    toks = jax.random.randint(jax.random.key(3), (2, 8), 0, cfg.vocab)
+    last = make_prefill(model)(params, tokens=toks)
+    full, _ = make_prefill(model, return_cache=True)(params, tokens=toks)
+    assert last.shape == (2, cfg.padded_vocab)
+    np.testing.assert_array_equal(_f32(last), _f32(full[:, -1]))
+
+
+@pytest.mark.parametrize("arch", CORE_IDS)
+def test_prefill_decode_handoff(arch):
+    """Prefill S-1 tokens, decode token S-1: logits match the full
+    forward bit for bit (the cache holds exactly what token-by-token
+    decode would have written)."""
+    cfg, model, params = _model(arch)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.key(4), (B, S), 0, cfg.vocab)
+    ref = _f32(model.forward(params, tokens=toks))[:, -1]
+
+    _, state = model.prefill(params, tokens=toks[:, :S - 1])
+    grown = jax.tree.map(
+        lambda t, r: jax.lax.dynamic_update_slice(
+            jnp.zeros(r.shape, t.dtype), t, (0,) * t.ndim),
+        state, model.init_decode_state(B, S))
+    logits, _ = model.decode_step(params, grown, jnp.int32(S - 1),
+                                  tokens=toks[:, -1:])
+    np.testing.assert_array_equal(_f32(logits[:, -1]), ref)
+
+
+# ------------------------------------------------------------------ #
+# block allocator                                                    #
+# ------------------------------------------------------------------ #
+def test_allocator_determinism_and_reuse():
+    def run():
+        a = BlockAllocator(n_pages=9, page_size=4)
+        s1 = a.alloc(10)               # 3 pages
+        s2 = a.alloc(5)                # 2 pages
+        a.free(s1)
+        s3 = a.alloc(12)               # reuses s1's pages, LIFO order
+        return s1, s2, s3
+
+    assert run() == run()              # same call sequence -> same pages
+    s1, s2, s3 = run()
+    assert 0 not in s1 + s2 + s3       # trash page never handed out
+    assert len(set(s2) & set(s3)) == 0  # live pages never shared
+    assert set(s3) == set(s1)          # freed pages get reused
+
+
+def test_allocator_errors():
+    a = BlockAllocator(n_pages=5, page_size=4)
+    pages = a.alloc(16)                # all 4 allocatable pages
+    assert not a.can_alloc(1)
+    with pytest.raises(MemoryError):
+        a.alloc(1)
+    with pytest.raises(ValueError):
+        a.free([0])                    # trash page is not allocatable
+    a.free(pages)
+    with pytest.raises(ValueError):
+        a.free([pages[0]])             # double free
+    assert pages_needed(1, 4) == 1 and pages_needed(9, 4) == 3
+
+
+# ------------------------------------------------------------------ #
+# paged decode vs dense decode                                       #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("arch", CORE_IDS)
+def test_paged_decode_matches_dense(arch):
+    """Same tokens through dense scalar-pos decode and paged per-row
+    decode (non-trivial page table): identical logits."""
+    cfg, model, params = _model(arch)
+    B, T, PS = 2, 6, 4
+    toks = jax.random.randint(jax.random.key(5), (B, T), 0, cfg.vocab)
+
+    dense = model.init_decode_state(B, T)
+    paged = model.init_paged_state(B, 9, PS)
+    table = jnp.asarray([[3, 1], [4, 2]], jnp.int32)   # scrambled pages
+    dstep = jax.jit(model.decode_step)
+    pstep = jax.jit(model.decode_step_paged)
+    for t in range(T):
+        dl, dense = dstep(params, dense, jnp.int32(t), tokens=toks[:, t:t + 1])
+        pl, paged = pstep(params, paged, table,
+                          jnp.full((B,), t, jnp.int32),
+                          tokens=toks[:, t:t + 1])
+        np.testing.assert_array_equal(_f32(dl), _f32(pl),
+                                      err_msg=f"{arch} pos {t}")
+
+
+def _engine(model, params, *, n_slots=2, buckets=(8,), max_new=4,
+            page_size=4, exec_cache=None, n_pages=None):
+    if n_pages is None:
+        n_pages = pool_pages_for(n_slots, max(buckets) + max_new, page_size)
+    return ServeEngine(model, params, n_slots=n_slots, n_pages=n_pages,
+                       page_size=page_size, max_new=max_new,
+                       buckets=buckets, exec_cache=exec_cache)
+
+
+def _dense_oracle(model, params, req, max_new):
+    """Reference generation: fused prefill + dense decode loop."""
+    cfg = model.cfg
+    L = req.prompt_len
+    logits, state = model.prefill(params, tokens=jnp.asarray(req.tokens[None]))
+    state = jax.tree.map(
+        lambda t, r: jax.lax.dynamic_update_slice(
+            jnp.zeros(r.shape, t.dtype), t, (0,) * t.ndim),
+        state, model.init_decode_state(1, L + max_new))
+    out = [int(jnp.argmax(logits[0, -1, :cfg.vocab]))]
+    step = jax.jit(make_serve_step(model))
+    for t in range(L, L + max_new - 1):
+        lg, state = step(params, state, jnp.int32(t),
+                         tokens=jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(lg[0, :cfg.vocab])))
+    return np.asarray(out, np.int32)
+
+
+def test_no_cross_sequence_leakage():
+    """Fill every pool page with garbage (as if dirtied by evicted
+    sequences) — outputs must not change: stale pages are masked to
+    exactly zero probability."""
+    cfg, model, params = _model("jamba-v0.1-52b")   # attn + ssm + moe
+    stream = RequestStream(cfg, buckets=(8,), max_new=4, seed=11)
+    req = stream.request(0)
+
+    clean = _engine(model, params)
+    clean.submit(stream.request(0))
+    ref = clean.run()[0].tokens
+
+    dirty = _engine(model, params)
+    key = jax.random.key(99)
+    dirty.pools = jax.tree.map(
+        lambda t: (jax.random.normal(key, t.shape, jnp.float32) * 10
+                   ).astype(t.dtype),
+        dirty.pools)
+    dirty.submit(req)
+    got = dirty.run()[0].tokens
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_engine_continuous_batching_matches_oracle():
+    """More requests than slots: admissions ride evictions, everything
+    completes, outputs equal the dense per-request oracle, and nothing
+    compiles after warmup."""
+    cfg, model, params = _model("qwen2.5-3b")
+    max_new = 4
+    eng = _engine(model, params, n_slots=2, buckets=(8, 16),
+                  max_new=max_new)
+    eng.warmup()
+    frozen = eng.cache.misses
+
+    stream = RequestStream(cfg, buckets=(8, 16), max_new=max_new, seed=7)
+    reqs = stream.requests(5)
+    for r in reqs:
+        eng.submit(r)
+    done = {d.req_id: d for d in eng.run()}
+
+    assert len(done) == len(reqs)
+    assert eng.cache.misses == frozen, "engine recompiled mid-run"
+    assert eng.alloc.free_pages == eng.alloc.n_pages - 1  # all freed
+    for r in reqs:
+        np.testing.assert_array_equal(
+            done[r.req_id].tokens, _dense_oracle(model, params, r, max_new),
+            err_msg=f"req {r.req_id}")
+        assert done[r.req_id].latencies.shape == (max_new,)
+
+
+# ------------------------------------------------------------------ #
+# replica layer: SPARe masking, zero drops, wipe-out reload          #
+# ------------------------------------------------------------------ #
+def _burst_injector(n_replicas, *, hosts_per_rack, seed=3,
+                    seconds_per_step=100.0):
+    from repro.des.params import DESParams
+    from repro.scenarios.topology import ClusterTopology
+    from repro.train import ScenarioInjector
+    topo = ClusterTopology(n_groups=n_replicas, hosts_per_group=1,
+                           hosts_per_rack=hosts_per_rack)
+    return ScenarioInjector(
+        {"kind": "correlated", "scope": "rack", "burst_prob": 1.0,
+         "mtbf": 400.0},
+        topo, n_groups=n_replicas, seconds_per_step=seconds_per_step,
+        params=DESParams(n=n_replicas, mtbf=400.0), seed=seed)
+
+
+def _server(model, params, n_replicas, injector=None, ckpt=None):
+    kwargs = dict(n_slots=2, page_size=4, max_new=4, buckets=(8,),
+                  n_pages=pool_pages_for(2, 8 + 4, 4))
+    srv = ReplicaServer(model, params, n_replicas=n_replicas,
+                        injector=injector, ckpt=ckpt, engine_kwargs=kwargs)
+    srv.warmup()
+    return srv
+
+
+def test_replica_burst_zero_drops_no_recompile():
+    """Rack bursts kill replicas mid-serving: every admitted request
+    still completes, outputs are bit-identical to the healthy run, and
+    the shared executable cache never misses again (SPARe masking is
+    weight-table data, not a program change)."""
+    cfg, model, params = _model("qwen2.5-3b")
+    stream = RequestStream(cfg, buckets=(8,), max_new=4, seed=7)
+
+    healthy = _server(model, params, n_replicas=3)
+    for r in stream.requests(8):
+        healthy.submit(r)
+    want = {d.req_id: d.tokens for d in healthy.run()}
+
+    srv = _server(model, params, n_replicas=3,
+                  injector=_burst_injector(3, hosts_per_rack=1))
+    frozen = srv.recompiles
+    for r in stream.requests(8):
+        srv.submit(r)
+    done = srv.run()
+
+    kills = [e for e in srv.events if e.kind == "kill"]
+    assert kills, "campaign produced no failures — gate is vacuous"
+    got = {d.req_id: d.tokens for d in done}
+    assert got.keys() == want.keys(), "requests were dropped"
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    assert srv.recompiles == frozen, "replica masking caused a recompile"
+    assert srv.dropped == 0
+
+
+def test_wipeout_reloads_from_checkpoint(tmp_path):
+    """All replicas in one rack: the first burst is a wipe-out. The
+    server reloads params via CheckpointManager, requeues everything,
+    and still completes every request with the same outputs."""
+    from repro.ckpt import CheckpointManager
+    cfg, model, params = _model("qwen2.5-3b")
+    stream = RequestStream(cfg, buckets=(8,), max_new=4, seed=13)
+
+    healthy = _server(model, params, n_replicas=2)
+    for r in stream.requests(4):
+        healthy.submit(r)
+    want = {d.req_id: d.tokens for d in healthy.run()}
+
+    ckpt = CheckpointManager(tmp_path, n_groups=2, redundancy=1,
+                             mtbf=1e6, t_save=1.0, t_restart=1.0)
+    srv = _server(model, params, n_replicas=2,
+                  injector=_burst_injector(2, hosts_per_rack=2),
+                  ckpt=ckpt)
+    frozen = srv.recompiles
+    for r in stream.requests(4):
+        srv.submit(r)
+    done = srv.run()
+
+    assert any(e.kind == "wipeout" for e in srv.events), \
+        "no wipe-out happened — reload path untested"
+    got = {d.req_id: d.tokens for d in done}
+    assert got.keys() == want.keys()
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    assert srv.recompiles == frozen, "wipe-out reload recompiled"
+
+
+# ------------------------------------------------------------------ #
+# spmd: masked vs unmasked replica programs                          #
+# ------------------------------------------------------------------ #
+@pytest.mark.spmd
+def test_masked_replica_schedule_equality():
+    """On the emulated 8-device mesh, the paged decode step compiled for
+    a healthy replica and for a masked (post-failure, re-weighted)
+    replica lowers to the same collective schedule — SPARe's §3.1
+    property carried over to serving."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import paged_cache_specs
+    from repro.launch.hlo import same_collective_schedule
+    from repro.launch.mesh import make_emulated_mesh
+
+    mesh = make_emulated_mesh(8)
+    cfg = smoke_config("qwen2.5-3b")
+    model = build_model(cfg, mesh=mesh)
+    params = model.init(jax.random.key(0))
+    params = jax.device_put(params, NamedSharding(mesh, P()))
+
+    n_slots, n_pages, ps = 8, 16, 4
+    pools = model.init_paged_state(n_slots, n_pages, ps)
+    specs = paged_cache_specs(
+        jax.tree.map(lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype),
+                     pools), cfg, mesh, multi_pod=False)
+    pools = jax.tree.map(
+        lambda t, s: jax.device_put(t, NamedSharding(mesh, s)),
+        pools, specs)
+
+    fn = make_serve_step(model, paged=True)
+
+    def lower_for(table, pos, toks):
+        return jax.jit(
+            lambda p, s, t, q, k: fn(p, s, t, q, tokens=k)).lower(
+                params, pools, table, pos, toks).compile().as_text()
+
+    # healthy: all 8 slots active; masked: half the slots parked on the
+    # trash page after their replica died — pure data, same program
+    full = jnp.arange(1, 17, dtype=jnp.int32).reshape(8, 2)
+    healthy = lower_for(full, jnp.full((8,), 5, jnp.int32),
+                        jnp.ones((8, 1), jnp.int32))
+    masked_table = full.at[4:].set(0)
+    masked = lower_for(masked_table, jnp.zeros((8,), jnp.int32)
+                       .at[:4].set(5), jnp.zeros((8, 1), jnp.int32))
+    assert same_collective_schedule(healthy, masked)
