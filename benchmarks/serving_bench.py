@@ -15,9 +15,10 @@ the other emulated-mesh benches):
 Both runs serve the identical deterministic
 :class:`~repro.data.pipeline.RequestStream` workload, so the bench also
 asserts the zero-dropped-requests and bit-identical-outputs gates, then
-appends one record (healthy + degraded tokens/s, p50/p99 per-token
-latency ms, event log, recompile counter) to ``BENCH_serving.json`` at
-the repo root.
+appends one record (healthy + degraded tokens/s, p50/p99/p99.9
+per-token latency ms — exact quantiles via
+:func:`repro.obs.metrics.latency_stats` — event log, recompile counter)
+to ``BENCH_serving.json`` at the repo root.
 
 Usage:
   python benchmarks/serving_bench.py [--arch qwen2.5-3b] [--requests 16]
@@ -68,8 +69,9 @@ def main() -> None:
 
     from repro.configs import smoke_config
     from repro.data import RequestStream
-    from repro.launch.serve import latency_stats, serve_and_measure
+    from repro.launch.serve import serve_and_measure
     from repro.models import build_model
+    from repro.obs.metrics import latency_stats   # p50/p99/p99.9, exact
     from repro.serve import ReplicaServer, pool_pages_for
     from repro.des.params import DESParams
     from repro.scenarios.topology import ClusterTopology

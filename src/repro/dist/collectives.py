@@ -354,6 +354,12 @@ class CompressedBucketSync:
 
     stateful = True
 
+    #: deep-mode telemetry (a ``repro.obs.Telemetry``), attached post-hoc
+    #: by the mesh executor: emits in-jit ``bucket/<i>`` markers around
+    #: each bucket's wire phases via ``jax.debug.callback``. Changing it
+    #: changes the traced program — strictly an attribution-session knob.
+    tel = None
+
     def __init__(self, layout: BucketLayout, dp_degree: int,
                  axis_name: str, *, fused: bool | None = None):
         for b, size in enumerate(layout.bucket_sizes):
@@ -410,8 +416,16 @@ class CompressedBucketSync:
         chunk's. Returns (reduced grads pytree, new state)."""
         bufs = flatten_grads(self.layout, grads)
         out, ne1, ne2 = [], [], []
-        for buf, e1, e2 in zip(bufs, state["err1"], state["err2"]):
+        tel = self.tel
+        if tel is not None:
+            tel.jit_instant("grad_sync", "sync", bufs[0])
+        for b, (buf, e1, e2) in enumerate(zip(bufs, state["err1"],
+                                              state["err2"])):
+            if tel is not None:
+                tel.jit_instant(f"bucket/{b}", "sync", buf)
             full, e1n, e2n = self._sync_bucket(buf, e1, e2)
+            if tel is not None:
+                tel.jit_instant(f"bucket/{b}/done", "sync", full)
             out.append(full)
             ne1.append(e1n)
             ne2.append(e2n)

@@ -72,6 +72,7 @@ from repro.dist.collectives import (BucketedAllReduce, CompressedBucketSync,
                                     shard_map_compat as _shard_map)
 from repro.launch.mesh import make_emulated_mesh
 from repro.models.config import ModelConfig
+from repro.obs.trace import maybe_span
 from repro.train.step import make_train_step, weighted_loss
 from repro.train.trainer import SpareTrainer, TrainReport
 
@@ -205,6 +206,13 @@ class MeshExecutor(SpareTrainer):
         self._prefetch: tuple[tuple, Future] | None = None
         self._mesh_grad_fn = None
         self.total_recompiles = 0   # cache misses, run-driven or not
+        # live wire accounting: launch/hlo.py's byte audit of the
+        # compiled step, memoized per S_A (see _observe_sync)
+        self._wire_info: dict[int, dict] = {}
+        if self.telemetry is not None and self.telemetry.deep \
+                and isinstance(self._grad_sync, CompressedBucketSync):
+            # deep mode: in-jit per-bucket markers (changes the program)
+            self._grad_sync.tel = self.telemetry
 
     # ------------------------------------------------------------- #
     # sharded step plumbing                                         #
@@ -248,6 +256,8 @@ class MeshExecutor(SpareTrainer):
             self.total_recompiles += 1
             if report is not None:
                 report.recompiles += 1
+            if self.telemetry is not None:
+                self.telemetry.counter("train.recompiles").inc()
         return self._jitted[s_a]
 
     # ------------------------------------------------------------- #
@@ -317,18 +327,26 @@ class MeshExecutor(SpareTrainer):
         state = self.state if state is None else state
         step = self.step if step is None else step
         key, schedule = self._batch_key(state, step)
-        slabs = None
-        if self._prefetch is not None:
-            pkey, fut = self._prefetch
-            self._prefetch = None
-            if pkey == key:
-                slabs = fut.result()
-            # else: a failure re-planned the schedule (or the caller
-            # asked for a different step) — the prefetched rows are
-            # stale; drop them and build synchronously
-        if slabs is None:
-            slabs = self._host_slabs(schedule, state.s_a, step)
-        return self._place_slabs(state.s_a, slabs)
+        tel = self.telemetry
+        hit = False
+        with maybe_span(tel, "feed"):
+            slabs = None
+            if self._prefetch is not None:
+                pkey, fut = self._prefetch
+                self._prefetch = None
+                if pkey == key:
+                    slabs = fut.result()
+                    hit = True
+                # else: a failure re-planned the schedule (or the caller
+                # asked for a different step) — the prefetched rows are
+                # stale; drop them and build synchronously
+            if slabs is None:
+                slabs = self._host_slabs(schedule, state.s_a, step)
+            out = self._place_slabs(state.s_a, slabs)
+        if tel is not None:
+            tel.counter("feed.prefetch_hits" if hit
+                        else "feed.prefetch_misses").inc()
+        return out
 
     def _prefetch_next(self):
         """Double buffer: queue the NEXT step's row materialization on
@@ -348,7 +366,38 @@ class MeshExecutor(SpareTrainer):
             result = fn(self.params, self.opt_state, batch)
         # the step is dispatched (async); overlap the next batch build
         self._prefetch_next()
+        if self.telemetry is not None:
+            self._observe_sync(self.telemetry)
         return result
+
+    def _observe_sync(self, tel) -> None:
+        """Publish the per-step gradient-sync wire accounting as live
+        metrics: ``launch/hlo.py``'s byte audit of the compiled step,
+        memoized per ``S_A`` (the executable is already compiled when
+        this runs, so the one-time lowering cost per depth is the only
+        overhead — steady-state steps just bump a counter). Deep mode
+        adds the int8-EF residual norms, which synchronize the device."""
+        s_a = self.state.s_a
+        info = self._wire_info.get(s_a)
+        if info is None:
+            from repro.launch.hlo import collective_report
+            # compiled_step_text builds its own batch — keep the live
+            # run's prefetched slabs out of its reach
+            saved, self._prefetch = self._prefetch, None
+            try:
+                text = self.compiled_step_text()
+            finally:
+                self._prefetch = saved
+            info = self._wire_info[s_a] = collective_report(text)
+        tel.gauge("sync.wire_bytes_per_step").set(info["total_bytes"])
+        tel.gauge("sync.collectives_per_step").set(
+            int(sum(info["counts"].values())))
+        tel.counter("sync.wire_bytes_total").inc(info["total_bytes"])
+        if tel.deep and self._ef_state is not None:
+            for fam in ("err1", "err2"):
+                sq = sum(float(jnp.vdot(b, b))
+                         for b in self._ef_state[fam])
+                tel.gauge(f"sync.ef_residual_norm.{fam}").set(sq ** 0.5)
 
     def run(self, *args, **kwargs):
         try:

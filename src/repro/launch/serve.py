@@ -23,10 +23,12 @@ import argparse
 import json
 import time
 
-import numpy as np
+from repro.obs.metrics import latency_stats  # noqa: F401 — re-exported;
+# the one implementation (exact-quantile histograms incl. p99.9) shared
+# with benchmarks/serving_bench.py
 
 
-def build_server(args, cfg, model, params):
+def build_server(args, cfg, model, params, telemetry=None):
     from repro.serve import ReplicaServer, pool_pages_for
 
     injector = None
@@ -57,7 +59,8 @@ def build_server(args, cfg, model, params):
         n_pages=pool_pages_for(args.slots, max(buckets) + args.max_new,
                                args.page_size))
     return ReplicaServer(model, params, n_replicas=args.replicas,
-                         injector=injector, ckpt=ckpt, engine_kwargs=kwargs)
+                         injector=injector, ckpt=ckpt, engine_kwargs=kwargs,
+                         telemetry=telemetry)
 
 
 def serve_and_measure(srv, requests):
@@ -67,19 +70,6 @@ def serve_and_measure(srv, requests):
     t0 = time.perf_counter()
     done = srv.run()
     return done, time.perf_counter() - t0
-
-
-def latency_stats(done):
-    lat = np.concatenate([d.latencies for d in done]) if done else \
-        np.zeros((0,))
-    tokens = int(sum(d.tokens.size for d in done))
-    return {
-        "tokens": tokens,
-        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3) if tokens
-        else None,
-        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3) if tokens
-        else None,
-    }
 
 
 def main() -> None:
@@ -105,6 +95,11 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None,
                     help="enables the wipe-out reload path")
     ap.add_argument("--report-json", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry and write a Perfetto-loadable "
+                         "trace (per-replica prefill/decode/admit/evict "
+                         "lanes + failure markers); metrics snapshot at "
+                         "PATH.metrics.json")
     args = ap.parse_args()
 
     import jax
@@ -112,14 +107,18 @@ def main() -> None:
     from repro.configs import smoke_config
     from repro.data import RequestStream
     from repro.models import build_model
+    from repro.obs import Telemetry
 
     cfg = smoke_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 
-    srv = build_server(args, cfg, model, params)
+    # metrics always on (counters are cheap and the no-recompile gate
+    # reads the snapshot); span recording only with --trace
+    tel = Telemetry(trace=args.trace is not None)
+    srv = build_server(args, cfg, model, params, telemetry=tel)
     srv.warmup()
-    frozen = srv.recompiles
+    frozen = tel.snapshot()["counters"]["serve.exec_cache.misses"]
     buckets = tuple(int(b) for b in args.buckets.split(","))
     stream = RequestStream(cfg, buckets=buckets, max_new=args.max_new,
                            seed=args.seed)
@@ -139,11 +138,20 @@ def main() -> None:
     if args.report_json:
         with open(args.report_json, "w") as fh:
             json.dump(report, fh, indent=1)
+    if args.trace:
+        tel.dump_trace(args.trace)
+        tel.metrics.dump(args.trace + ".metrics.json")
+        print(f"[serve] trace -> {args.trace} (analyze: python -m "
+              f"repro.launch.obs {args.trace})")
 
     assert len(done) == args.requests, (
         f"dropped {args.requests - len(done)} requests")
-    assert srv.recompiles == frozen, (
-        f"recompiled after warmup: {srv.recompiles - frozen} misses")
+    # the frozen-recompiles gate reads the METRICS SNAPSHOT — the cache's
+    # counters are the registry's, so snapshot and cache cannot diverge
+    snap = tel.snapshot()
+    assert snap["counters"]["serve.exec_cache.misses"] == frozen, (
+        f"recompiled after warmup: "
+        f"{snap['counters']['serve.exec_cache.misses'] - frozen} misses")
 
 
 if __name__ == "__main__":

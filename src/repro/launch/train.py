@@ -62,11 +62,17 @@ def _sweep_regimes(args) -> None:
     from repro.scenarios.campaign import (run_trainer_cell,
                                           trainer_regime_cells)
 
+    trace_dir = args.trace     # in sweep mode --trace names a DIRECTORY
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        print(f"[sweep] telemetry on: one trace per regime under "
+              f"{trace_dir}/", file=sys.stderr)
     cells = trainer_regime_cells(steps=args.steps, n=args.n_groups,
                                  r=_resolve_r(args),
                                  topology=_spec(args.topology),
                                  seconds_per_step=args.seconds_per_step,
-                                 base_seed=args.seed)
+                                 base_seed=args.seed,
+                                 trace_dir=trace_dir or None)
     rows = []
     for cell in cells:
         label = cell["model"].get("label", cell["model"]["kind"])
@@ -89,7 +95,7 @@ def _sweep_regimes(args) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default=None)
+    ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--n-groups", type=int, default=8,
                     help="SPARe data-parallel degree N")
@@ -145,13 +151,20 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--report-json", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record telemetry and write a Perfetto-loadable "
+                         "Chrome trace here (analyze with "
+                         "python -m repro.launch.obs PATH); a metrics "
+                         "snapshot lands next to it at PATH.metrics.json")
+    ap.add_argument("--trace-deep", action="store_true",
+                    help="with --trace: in-jit bucket markers + EF "
+                         "residual norms (changes the compiled program; "
+                         "attribution sessions only)")
     args = ap.parse_args()
 
     if args.sweep_regimes:
         _sweep_regimes(args)
         return
-    if args.arch is None:
-        ap.error("--arch is required (unless --sweep-regimes)")
 
     if args.mesh:
         # must land before the FIRST jax import (jax locks the device
@@ -179,11 +192,16 @@ def main() -> None:
           f"scheme={args.scheme} steps={args.steps} mesh={plane} "
           f"params={cfg.param_count():,}")
 
+    tel = None
+    if args.trace is not None:
+        from repro.obs import Telemetry
+        tel = Telemetry(deep=args.trace_deep)
+
     scheme_kwargs = {} if args.scheme == "ckpt_only" else {"r": r}
     common = dict(n_groups=args.n_groups, redundancy=r, seq=args.seq,
                   per_type_batch=args.per_type_batch, seed=args.seed,
                   ckpt_dir=args.ckpt_dir, base_lr=args.lr,
-                  total_steps=args.steps,
+                  total_steps=args.steps, telemetry=tel,
                   scheme=get_scheme(args.scheme, **scheme_kwargs))
     if args.mesh:
         from repro.exec import MeshExecutor
@@ -226,6 +244,12 @@ def main() -> None:
                        "multi_group_events": rep.multi_group_events,
                        "max_grad_check_err": rep.max_grad_check_err},
                       f)
+    if tel is not None:
+        tel.dump_trace(args.trace)
+        tel.metrics.dump(args.trace + ".metrics.json")
+        print(f"[train] trace -> {args.trace} (analyze: python -m "
+              f"repro.launch.obs {args.trace}) | metrics -> "
+              f"{args.trace}.metrics.json")
 
 
 if __name__ == "__main__":

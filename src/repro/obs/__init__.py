@@ -1,0 +1,26 @@
+"""repro.obs — unified telemetry: span tracing + metrics registry.
+
+The measurement substrate every layer reports into:
+
+* :mod:`repro.obs.trace` — low-overhead host-side span recorder with
+  Chrome-trace/Perfetto export, instant failure/recovery markers on
+  per-DP-group tracks, and the nullable :class:`Telemetry` handle the
+  trainer / mesh executor / serving tier thread through their hot
+  loops (``None`` keeps the uninstrumented path allocation-free);
+* :mod:`repro.obs.metrics` — counters / gauges / exact-quantile
+  histograms, snapshottable to deterministic JSON;
+* ``python -m repro.launch.obs trace.json`` — text timeline + the
+  recovery-attribution table (time lost to masking vs rollback vs
+  restart) rendered from a dumped trace.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               latency_stats, quantile_key)
+from repro.obs.trace import (Instant, Span, Telemetry, TraceRecorder,
+                             TraceView, load_trace, maybe_span, tick)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "latency_stats",
+    "quantile_key",
+    "Telemetry", "TraceRecorder", "TraceView", "Span", "Instant",
+    "load_trace", "maybe_span", "tick",
+]

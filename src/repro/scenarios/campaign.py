@@ -330,11 +330,13 @@ def trainer_regime_cells(arch: str = "qwen2.5-3b", n: int = 8, r: int = 3,
                          per_type_batch: int = 1,
                          models: list | None = None, topology=None,
                          seconds_per_step: float | None = None,
-                         base_seed: int = 0) -> list[dict]:
+                         base_seed: int = 0,
+                         trace_dir: str | None = None) -> list[dict]:
     """The live-trainer campaign preset: one cell per failure regime,
     tiny config, rack-dominated topology (2 hosts/group, 4 hosts/rack =>
     2 groups per rack, so rack kills are genuine multi-group batches).
-    ``topology`` may be a preset name or a spec dict."""
+    ``topology`` may be a preset name or a spec dict. ``trace_dir``
+    turns telemetry on per cell (one Perfetto trace per regime)."""
     if topology is None:
         topology = {"n_groups": n, "hosts_per_group": 2,
                     "hosts_per_rack": 4}
@@ -350,6 +352,9 @@ def trainer_regime_cells(arch: str = "qwen2.5-3b", n: int = 8, r: int = 3,
         }
         if seconds_per_step is not None:
             cell["seconds_per_step"] = seconds_per_step
+        if trace_dir is not None:
+            label = model.get("label", model["kind"])
+            cell["trace"] = str(Path(trace_dir) / f"{label}.trace.json")
         cells.append(cell)
     return cells
 
@@ -358,7 +363,9 @@ def run_trainer_cell(cell: dict) -> dict:
     """Worker entry point for live-trainer cells: drive the real
     :class:`repro.train.trainer.SpareTrainer` through the cell's failure
     regime via the injection bridge, verifying the §3.1 gradient
-    invariant after every successful recovery."""
+    invariant after every successful recovery. ``cell["trace"]`` (a
+    path) turns telemetry on and dumps the run's Perfetto trace there
+    (metrics snapshot alongside at ``<trace>.metrics.json``)."""
     from ..configs import smoke_config
     from ..train.injection import ScenarioInjector
     from ..train.trainer import SpareTrainer
@@ -369,15 +376,22 @@ def run_trainer_cell(cell: dict) -> dict:
     injector = ScenarioInjector(
         cell["model"], topo, n_groups=cell["n"],
         seconds_per_step=cell.get("seconds_per_step"), seed=seed)
+    tel = None
+    if cell.get("trace"):
+        from ..obs import Telemetry
+        tel = Telemetry()
     trainer = SpareTrainer(
         cfg, n_groups=cell["n"], redundancy=cell["r"],
         seq=cell.get("seq", 32),
         per_type_batch=cell.get("per_type_batch", 1), seed=seed,
-        total_steps=cell["steps"])
+        total_steps=cell["steps"], telemetry=tel)
     t0 = time.perf_counter()
     rep = trainer.run(cell["steps"], injector=injector,
                       verify_equivalence=cell.get("verify", True))
     elapsed = time.perf_counter() - t0
+    if tel is not None:
+        tel.dump_trace(cell["trace"])
+        tel.metrics.dump(str(cell["trace"]) + ".metrics.json")
     return {
         "key": cell_key(cell),
         "model": cell["model"].get("label", cell["model"]["kind"]),

@@ -51,7 +51,7 @@ from .topology import ClusterTopology, topology_from_spec
 
 __all__ = [
     "FailureModel", "RenewalModel", "PoissonModel", "CorrelatedModel",
-    "DiurnalModel", "TraceReplayModel", "SuperposedModel",
+    "RackBurstModel", "DiurnalModel", "TraceReplayModel", "SuperposedModel",
     "register_failure_model", "get_failure_model", "list_failure_models",
     "model_from_spec", "bundled_traces", "load_trace", "sample_kill_batches",
     "bind_model", "drain_event_window", "to_step_events",
@@ -238,6 +238,21 @@ class CorrelatedModel(RenewalModel):
                 blast = self.topo.blast_radius(v, scope)
                 return [w for w in blast if w not in dead]
         return [v]
+
+
+@register_failure_model
+class RackBurstModel(CorrelatedModel):
+    """Every arrival is a full-rack kill — the Kokolis-style rackstorm
+    regime as a one-word preset (``--failure-model rack_burst``): a
+    uniform seed victim always escalates to its whole rack's alive
+    groups. Equivalent to ``{"kind": "correlated", "scope": "rack",
+    "burst_prob": 1.0}``; renewal kwargs (``mtbf``, ``shape``...) pass
+    through."""
+
+    name = "rack_burst"
+
+    def __init__(self, **renewal_kw):
+        super().__init__(scope="rack", burst_prob=1.0, **renewal_kw)
 
 
 # ------------------------------------------------------------------ #

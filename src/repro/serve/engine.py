@@ -43,6 +43,8 @@ import numpy as np
 
 from repro.data.pipeline import ServeRequest
 from repro.models.model import Model
+from repro.obs.metrics import Counter
+from repro.obs.trace import maybe_span
 from repro.train.step import make_prefill, make_serve_step
 
 from .kvcache import BlockAllocator, make_cache_writer, pages_needed
@@ -58,20 +60,38 @@ class ExecutableCache:
     acceptance gate). Shared by every replica engine of a
     :class:`~repro.serve.replicas.ReplicaServer` so a request re-routed
     to a survivor hits the same executables.
+
+    The counts live in :class:`repro.obs.metrics.Counter` objects — pass
+    a :class:`~repro.obs.metrics.MetricsRegistry` and they ARE the
+    registry's ``serve.exec_cache.misses`` / ``.hits`` entries, so a
+    metrics snapshot and this cache can never disagree (the serve CLI's
+    frozen-recompiles gate checks the snapshot).
     """
 
-    def __init__(self):
+    def __init__(self, metrics=None):
         self._exe: dict[tuple, object] = {}
-        self.misses = 0
-        self.hits = 0
+        if metrics is None:
+            self._misses = Counter()
+            self._hits = Counter()
+        else:
+            self._misses = metrics.counter("serve.exec_cache.misses")
+            self._hits = metrics.counter("serve.exec_cache.hits")
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
 
     def get(self, key: tuple, build):
         exe = self._exe.get(key)
         if exe is None:
-            self.misses += 1
+            self._misses.inc()
             exe = self._exe[key] = build()
         else:
-            self.hits += 1
+            self._hits.inc()
         return exe
 
     @property
@@ -106,9 +126,13 @@ class ServeEngine:
     def __init__(self, model: Model, params, *, n_slots: int,
                  n_pages: int, page_size: int, max_new: int,
                  buckets: tuple[int, ...],
-                 exec_cache: ExecutableCache | None = None):
+                 exec_cache: ExecutableCache | None = None,
+                 telemetry=None, track: str = "serve"):
         self.model = model
         self.params = params
+        self.telemetry = telemetry      # repro.obs.Telemetry | None
+        self.track = track              # trace lane (replica/<r> under
+        #                                 a ReplicaServer)
         self.n_slots = n_slots
         self.page_size = page_size
         self.max_new = max_new
@@ -226,6 +250,7 @@ class ServeEngine:
     # the loop                                                       #
     # ------------------------------------------------------------- #
     def _admit(self) -> None:
+        tel = self.telemetry
         for i in range(self.n_slots):
             if not self.queue or self.slots[i] is not None:
                 continue
@@ -237,34 +262,47 @@ class ServeEngine:
             pages = self.alloc.alloc(total)
             length = req.prompt_len
 
-            t0 = time.perf_counter()
-            logits, dense = self._prefill_exe(length)(
-                self.params, jnp.asarray(req.tokens[None, :]))
-            self.pools = self._write_exe(length)(
-                self.pools, dense, jnp.asarray(pages, jnp.int32),
-                jnp.int32(i))
-            first = int(np.argmax(
-                np.asarray(logits[0, -1, :self.model.cfg.vocab])))
-            dt = time.perf_counter() - t0
+            with maybe_span(tel, "admit", self.track,
+                            args=(None if tel is None else
+                                  {"req": req.req_id, "len": length})):
+                t0 = time.perf_counter()
+                with maybe_span(tel, "prefill", self.track):
+                    logits, dense = self._prefill_exe(length)(
+                        self.params, jnp.asarray(req.tokens[None, :]))
+                    self.pools = self._write_exe(length)(
+                        self.pools, dense, jnp.asarray(pages, jnp.int32),
+                        jnp.int32(i))
+                    first = int(np.argmax(
+                        np.asarray(logits[0, -1, :self.model.cfg.vocab])))
+                dt = time.perf_counter() - t0
 
-            slot = _Slot(request=req, pages=pages,
-                         admitted_step=self.step_idx)
-            slot.generated.append(first)
-            slot.latencies.append(dt)
-            self.slots[i] = slot
-            self.table[i] = 0
-            self.table[i, :len(pages)] = pages
-            self.pos[i] = length
-            self.next_tok[i] = first
-            self.admitted += 1
+                slot = _Slot(request=req, pages=pages,
+                             admitted_step=self.step_idx)
+                slot.generated.append(first)
+                slot.latencies.append(dt)
+                self.slots[i] = slot
+                self.table[i] = 0
+                self.table[i, :len(pages)] = pages
+                self.pos[i] = length
+                self.next_tok[i] = first
+                self.admitted += 1
+            if tel is not None:
+                tel.counter("serve.admitted").inc()
+                tel.histogram("serve.prefill_latency_s").observe(dt)
 
     def _evict_finished(self) -> list[FinishedRequest]:
+        tel = self.telemetry
         done = []
         for i, slot in enumerate(self.slots):
             if slot is None or len(slot.generated) < slot.request.max_new:
                 continue
-            self.alloc.free(slot.pages)
-            self._clear_slot(i)
+            with maybe_span(tel, "evict", self.track,
+                            args=(None if tel is None else
+                                  {"req": slot.request.req_id})):
+                self.alloc.free(slot.pages)
+                self._clear_slot(i)
+            if tel is not None:
+                tel.counter("serve.completed").inc()
             self.completed += 1
             done.append(FinishedRequest(
                 req_id=slot.request.req_id,
@@ -279,18 +317,23 @@ class ServeEngine:
 
     def step(self) -> list[FinishedRequest]:
         """One engine tick: admit, decode one token everywhere, evict."""
+        tel = self.telemetry
         self._admit()
         done = self._evict_finished()      # max_new == 1 finishes here
 
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if active:
-            t0 = time.perf_counter()
-            logits, self.pools = self._decode_exe()(
-                self.params, self.pools, jnp.asarray(self.table),
-                jnp.asarray(self.pos), jnp.asarray(self.next_tok[:, None]))
-            toks = np.argmax(
-                np.asarray(logits[:, :self.model.cfg.vocab]), axis=-1)
-            dt = time.perf_counter() - t0
+            with maybe_span(tel, "decode", self.track,
+                            args=(None if tel is None else
+                                  {"active": len(active)})):
+                t0 = time.perf_counter()
+                logits, self.pools = self._decode_exe()(
+                    self.params, self.pools, jnp.asarray(self.table),
+                    jnp.asarray(self.pos),
+                    jnp.asarray(self.next_tok[:, None]))
+                toks = np.argmax(
+                    np.asarray(logits[:, :self.model.cfg.vocab]), axis=-1)
+                dt = time.perf_counter() - t0
             for i in active:
                 slot = self.slots[i]
                 slot.generated.append(int(toks[i]))
@@ -298,8 +341,16 @@ class ServeEngine:
                 self.pos[i] += 1
                 self.next_tok[i] = int(toks[i])
             done += self._evict_finished()
+            if tel is not None:
+                tel.counter("serve.tokens").inc(len(active))
+                tel.histogram("serve.token_latency_s").observe(dt)
 
         self.step_idx += 1
+        if tel is not None:
+            tel.gauge("serve.queue_depth").set(len(self.queue))
+            tel.gauge("serve.kv_pages.free").set(self.alloc.free_pages)
+            tel.gauge("serve.kv_pages.used").set(
+                self.alloc.n_pages - 1 - self.alloc.free_pages)
         return done
 
     def run(self, max_steps: int = 10_000) -> list[FinishedRequest]:

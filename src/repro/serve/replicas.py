@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.state import SpareState
 from repro.data.pipeline import ServeRequest
 from repro.models.model import Model
+from repro.obs.trace import maybe_span
 from repro.scenarios.topology import ClusterTopology
 
 from .engine import ExecutableCache, FinishedRequest, ServeEngine
@@ -59,16 +60,25 @@ class ReplicaServer:
 
     def __init__(self, model: Model, params, *, n_replicas: int,
                  topology: ClusterTopology | None = None,
-                 injector=None, ckpt=None, engine_kwargs: dict):
+                 injector=None, ckpt=None, engine_kwargs: dict,
+                 telemetry=None):
         self.model = model
         self.params = params
         self.topology = topology
         self.injector = injector
         self.ckpt = ckpt
+        self.telemetry = telemetry      # repro.obs.Telemetry | None
+        if telemetry is not None and injector is not None \
+                and hasattr(injector, "telemetry"):
+            injector.telemetry = telemetry
         self.spare = SpareState(n_replicas, 1)
-        self.exec_cache = ExecutableCache()
+        # the cache's hit/miss counters ARE the metrics-registry entries
+        # when telemetry is on — one source of truth for the
+        # frozen-recompiles gate
+        self.exec_cache = ExecutableCache(
+            None if telemetry is None else telemetry.metrics)
         self.engine_kwargs = dict(engine_kwargs)
-        self.engines = [self._new_engine() for _ in range(n_replicas)]
+        self.engines = [self._new_engine(r) for r in range(n_replicas)]
         # smooth weighted round-robin credits over the weight table
         self._credits = np.zeros(n_replicas, np.float64)
         self.step_idx = 0
@@ -78,9 +88,11 @@ class ReplicaServer:
             # durable base image for the wipe-out path
             ckpt.maybe_save(0, params, block=True, force=True)
 
-    def _new_engine(self) -> ServeEngine:
+    def _new_engine(self, r: int) -> ServeEngine:
         return ServeEngine(self.model, self.params,
-                           exec_cache=self.exec_cache, **self.engine_kwargs)
+                           exec_cache=self.exec_cache,
+                           telemetry=self.telemetry, track=f"replica/{r}",
+                           **self.engine_kwargs)
 
     # ------------------------------------------------------------- #
     # weight table + routing                                         #
@@ -144,7 +156,8 @@ class ReplicaServer:
             _, self.params = self.ckpt.restore_latest(self.params)
         self.spare.reset()
         self._credits[:] = 0.0
-        self.engines = [self._new_engine() for _ in self.engines]
+        self.engines = [self._new_engine(r)
+                        for r in range(len(self.engines))]
         # fresh pools over restored params; executables are shape-keyed
         # so the shared cache still hits — a wipe-out reload does not
         # recompile either
@@ -157,14 +170,30 @@ class ReplicaServer:
     # ------------------------------------------------------------- #
     def step(self) -> list[FinishedRequest]:
         """One server tick: deliver failures, mask, drive live engines."""
+        tel = self.telemetry
         if self.injector is not None:
             for ev in self.injector.poll(self.spare):
+                if tel is not None:
+                    for v in ev.victims:
+                        tel.instant("failure", track=f"replica/{v}",
+                                    args={"step": self.step_idx})
+                    tel.counter("serve.kills").inc(len(ev.victims))
                 n = self._kill(ev.victims)
+                if tel is not None and n:
+                    tel.counter("serve.requeued").inc(n)
                 self.events.append(ReplicaEvent(
                     step=self.step_idx, kind="kill",
                     victims=list(ev.victims), requeued=n))
             if not self.spare.alive.any():
-                n = self._wipeout()
+                with maybe_span(tel, "recover",
+                                args=(None if tel is None else
+                                      {"step": self.step_idx,
+                                       "wipeout": True})):
+                    n = self._wipeout()
+                if tel is not None:
+                    tel.counter("serve.wipeouts").inc()
+                    if n:
+                        tel.counter("serve.requeued").inc(n)
                 self.events.append(ReplicaEvent(
                     step=self.step_idx, kind="wipeout", requeued=n))
 
@@ -172,6 +201,13 @@ class ReplicaServer:
         for r in np.flatnonzero(self.spare.alive):
             done += self.engines[int(r)].step()
         self.step_idx += 1
+        if tel is not None:
+            tel.gauge("serve.replicas_alive").set(
+                int(self.spare.alive.sum()))
+            tel.gauge("serve.queue_depth").set(
+                sum(e.pending for e in self.engines))
+            tel.gauge("serve.kv_pages.free").set(
+                sum(e.alloc.free_pages for e in self.engines))
         return done
 
     def run(self, max_steps: int = 10_000) -> list[FinishedRequest]:

@@ -100,6 +100,9 @@ class ScenarioInjector:
         self._next_fail = self.model.next_arrival(0.0, self.n, self.n)
         self.events_delivered = 0
         self.victims_delivered = 0
+        # SpareTrainer.run auto-attaches its Telemetry here (if any) so
+        # injection counters land in the same metrics snapshot
+        self.telemetry = None
 
     # ------------------------------------------------------------- #
     def poll(self, state: SpareState) -> list[StepEvent]:
@@ -117,6 +120,10 @@ class ScenarioInjector:
         self.step += 1
         self.events_delivered += len(out)
         self.victims_delivered += sum(len(e.victims) for e in out)
+        if self.telemetry is not None and out:
+            self.telemetry.counter("inject.events").inc(len(out))
+            self.telemetry.counter("inject.victims").inc(
+                sum(len(e.victims) for e in out))
         return out
 
     def __call__(self, state: SpareState) -> list[int]:

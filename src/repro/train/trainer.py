@@ -51,6 +51,7 @@ from repro.data import ShardedTokenPipeline, spare_batch
 from repro.des import DESParams, FaultToleranceScheme, get_scheme
 from repro.models import build_model
 from repro.models.config import ModelConfig
+from repro.obs.trace import Telemetry, maybe_span
 from repro.optim import adamw_init
 from repro.train.step import make_train_step
 
@@ -101,6 +102,12 @@ class RecoveryEvent:
     moves: int = 0
     rollback_depth: int = 0          # steps rolled back (wipe-out only)
     grad_check_err: float | None = None   # §3.1 relative error, if verified
+    # -- durations (the obs CLI's attribution table keys off these) -- #
+    wall_seconds: float = 0.0        # host wall-clock handling the event
+    step_seconds: float = 0.0        # step-clock cost: controller time for
+    #                                  a mask, rollback_depth x sec/step
+    #                                  for a wipe-out
+    restart_seconds: float = 0.0     # modeled outage (t_restart, wipe-outs)
 
     @property
     def multi_group(self) -> bool:
@@ -141,8 +148,10 @@ class SpareTrainer:
                  ckpt_dir: str | None = None, mtbf: float = 300.0,
                  t_save: float = 60.0, t_restart: float = 3600.0,
                  base_lr: float = 3e-4, total_steps: int = 1000,
-                 scheme: FaultToleranceScheme | None = None):
+                 scheme: FaultToleranceScheme | None = None,
+                 telemetry: Telemetry | None = None):
         self.cfg = cfg
+        self.telemetry = telemetry
         self.state = SpareState(n_groups, redundancy)
         # recovery policy: any registered FaultToleranceScheme; defaults to
         # SPARe (Alg. 1/2). `ctl` stays exposed for direct controller pokes
@@ -152,6 +161,7 @@ class SpareTrainer:
             else get_scheme("spare", r=redundancy)
         self.scheme.prepare(DESParams(n=n_groups, mtbf=mtbf, t_save=t_save,
                                       t_restart=t_restart))
+        self._t_restart = float(t_restart)   # modeled outage per wipe-out
         self.ctl = getattr(self.scheme, "ctl", None) or Rectlr()
         self.model = build_model(cfg)
         self.pipeline = ShardedTokenPipeline(cfg, seq, per_type_batch,
@@ -179,6 +189,8 @@ class SpareTrainer:
         if s_a not in self._jitted:
             self._jitted[s_a] = jax.jit(self._step_fn, donate_argnums=(0, 1))
             report.recompiles += 1
+            if self.telemetry is not None:
+                self.telemetry.counter("train.recompiles").inc()
         return self._jitted[s_a]
 
     def _dispatch(self, report: TrainReport):
@@ -225,6 +237,10 @@ class SpareTrainer:
             verify_equivalence: bool = False,
             equivalence_tol: float = 1e-2) -> TrainReport:
         report = TrainReport()
+        tel = self.telemetry
+        if tel is not None and injector is not None \
+                and hasattr(injector, "telemetry"):
+            injector.telemetry = tel    # scenario bridge reports too
         self._snapshot_now()
         target = self.step + steps
         while self.step < target:
@@ -238,34 +254,69 @@ class SpareTrainer:
                 if not victims:
                     continue
                 report.failures += len(victims)
-                outcome = self.scheme.recover(self.state, victims,
-                                              step=self.step)
-                report.controller_seconds += outcome.controller_seconds
-                event = RecoveryEvent(
-                    step=self.step, victims=victims,
-                    wipeout=outcome.wipeout, reordered=outcome.reordered,
-                    patch_count=outcome.patch_count,
-                    s_a_before=outcome.s_a_before,
-                    s_a_after=outcome.s_a_after, moves=outcome.moves)
-                if outcome.wipeout:
-                    report.wipeouts += 1
-                    self.state.reset()
-                    rolled_from = self.step
-                    self.step, (self.params, self.opt_state) = \
-                        self._rollback()
-                    event.rollback_depth = rolled_from - self.step
-                    notify = getattr(injector, "notify_wipeout", None)
-                    if notify is not None:
-                        notify()     # outage elapsed; re-arm the model
+                if tel is not None:
+                    tel.counter("train.failures").inc(len(victims))
+                    for g in victims:
+                        tel.instant("failure", track=f"dp/{g}",
+                                    args={"step": self.step})
+                # span args carry only schedule-deterministic fields
+                # (no measured times) so seeded traces stay byte-stable
+                ev_args = {"step": self.step, "victims": list(victims)}
+                t_ev = time.perf_counter()
+                with maybe_span(tel, "recover", args=ev_args):
+                    outcome = self.scheme.recover(self.state, victims,
+                                                  step=self.step)
+                    report.controller_seconds += outcome.controller_seconds
+                    event = RecoveryEvent(
+                        step=self.step, victims=victims,
+                        wipeout=outcome.wipeout,
+                        reordered=outcome.reordered,
+                        patch_count=outcome.patch_count,
+                        s_a_before=outcome.s_a_before,
+                        s_a_after=outcome.s_a_after, moves=outcome.moves)
+                    ev_args.update(wipeout=outcome.wipeout,
+                                   s_a_before=outcome.s_a_before,
+                                   s_a_after=outcome.s_a_after)
+                    if outcome.wipeout:
+                        report.wipeouts += 1
+                        self.state.reset()
+                        rolled_from = self.step
+                        self.step, (self.params, self.opt_state) = \
+                            self._rollback()
+                        event.rollback_depth = rolled_from - self.step
+                        sec_per_step = float(getattr(
+                            injector, "seconds_per_step", 0.0) or 0.0)
+                        event.step_seconds = \
+                            event.rollback_depth * sec_per_step
+                        event.restart_seconds = self._t_restart
+                        ev_args.update(
+                            rollback_depth=event.rollback_depth,
+                            restart_seconds=event.restart_seconds)
+                        notify = getattr(injector, "notify_wipeout", None)
+                        if notify is not None:
+                            notify()     # outage elapsed; re-arm the model
+                        wiped = True
+                    else:
+                        # masked: the step-clock cost is the controller
+                        event.step_seconds = outcome.controller_seconds
+                event.wall_seconds = time.perf_counter() - t_ev
+                if tel is not None:
+                    if outcome.wipeout:
+                        tel.counter("train.wipeouts").inc()
+                        tel.counter("train.rollback_steps").inc(
+                            event.rollback_depth)
+                    tel.gauge("train.s_a").set(outcome.s_a_after)
+                if wiped:
                     report.events.append(event)
-                    wiped = True
                     break   # later events hit a system already down
                 report.reorders += int(outcome.reordered)
                 report.patches += outcome.patch_count
                 if verify_equivalence:
                     # §3.1 invariant: the recovered schedule must still
                     # collect vanilla DP's exact batch gradient
-                    event.grad_check_err = self.equivalence_error()
+                    with maybe_span(tel, "grad_check",
+                                    args={"step": self.step}):
+                        event.grad_check_err = self.equivalence_error()
                     if event.grad_check_err > equivalence_tol:
                         raise RuntimeError(
                             f"§3.1 gradient equivalence violated after "
@@ -277,17 +328,30 @@ class SpareTrainer:
                 # again — the step below re-collects every type
             if wiped:
                 continue
-            new_params, new_opt, metrics = self._dispatch(report)
-            self.params, self.opt_state = new_params, new_opt
-            report.losses.append(float(metrics["loss"]))
-            self.step += 1
-            report.steps_done += 1
-            if self.step % snapshot_every == 0:
-                self._snapshot_now()
-                if self.ckpt is not None:
-                    self.ckpt.maybe_save(self.step,
-                                         (self.params, self.opt_state))
-                    report.ckpt_saves = self.ckpt.saves
+            with maybe_span(
+                    tel, "step",
+                    args=(None if tel is None else
+                          {"step": self.step,
+                           "s_a": self.state.s_a})) as step_span:
+                with maybe_span(tel, "compute"):
+                    new_params, new_opt, metrics = self._dispatch(report)
+                    self.params, self.opt_state = new_params, new_opt
+                    loss = float(metrics["loss"])   # blocks on the device
+                report.losses.append(loss)
+                self.step += 1
+                report.steps_done += 1
+                if self.step % snapshot_every == 0:
+                    with maybe_span(tel, "ckpt_save"):
+                        self._snapshot_now()
+                        if self.ckpt is not None:
+                            self.ckpt.maybe_save(
+                                self.step, (self.params, self.opt_state))
+                            report.ckpt_saves = self.ckpt.saves
+            if tel is not None:
+                tel.counter("train.steps").inc()
+                tel.histogram("train.step_seconds").observe(step_span.dur)
+                if step_span.dur > 0:
+                    tel.gauge("train.steps_per_s").set(1.0 / step_span.dur)
         if self.ckpt is not None:
             self.ckpt.wait()
             # forced/trailing saves land between snapshot boundaries:
