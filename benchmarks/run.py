@@ -59,20 +59,20 @@ def main() -> None:
 
     names = (args.only.split(",") if args.only else list(SUITES))
     print("name,us_per_call,derived")
-    t0 = time.time()
+    t0 = time.perf_counter()
     for name in names:
         if name not in SUITES:
             print(f"# unknown suite {name!r}; have {sorted(SUITES)}",
                   file=sys.stderr)
             continue
-        t1 = time.time()
+        t1 = time.perf_counter()
         run_fn = SUITES[name].run
         kw = ({"jobs": args.jobs}
               if "jobs" in inspect.signature(run_fn).parameters else {})
         for row in run_fn(quick=not args.full, **kw):
             print(row)
-        print(f"# {name} done in {time.time() - t1:.1f}s", file=sys.stderr)
-    print(f"# all suites done in {time.time() - t0:.1f}s", file=sys.stderr)
+        print(f"# {name} done in {time.perf_counter() - t1:.1f}s", file=sys.stderr)
+    print(f"# all suites done in {time.perf_counter() - t0:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

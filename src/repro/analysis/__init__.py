@@ -1,0 +1,42 @@
+"""repro.analysis — static SPARe-invariant verification.
+
+The paper's recovery math holds only if the lowered step programs are
+*statically* well-behaved: masking must stay pure weight-table data
+(identical collective schedules for every recoverable survivor set),
+donated buffers must actually alias their outputs (a silent 2x memory
+cost otherwise), step programs must stay free of host transfers and
+fp64, and the int8 wire payloads must never be psummed. The runtime
+spot-checks in ``tests/test_exec.py`` prove these on a handful of
+fixtures; this package turns them into a pass framework any program —
+and CI — can run:
+
+* **HLO passes** (:mod:`.hlo_passes`) analyze compiled (post-SPMD) HLO
+  text via :mod:`repro.launch.hlo`: ``collective-schedule-determinism``,
+  ``donation-audit``, ``hot-path-purity``, ``wire-dtype-policy``.
+* **AST passes** (:mod:`.ast_passes`) lint Python source repo-wide:
+  ``determinism`` (wall-clock reads, unseeded RNG, set-iteration order,
+  PYTHONHASHSEED-dependent ``hash()``, mutable defaults) and
+  ``thread-shared-state`` (thread-target closures touching shared
+  mutable state outside the submit-argument channel).
+
+``python -m repro.launch.lint`` is the driver; findings render as a
+deterministic JSON + text report and a single line suppresses a
+reviewed one: ``# lint: ignore[<rule>]``.
+"""
+from repro.analysis.core import (Report, Violation, iter_source_files,
+                                 suppressed_lines)
+from repro.analysis.ast_passes import (AST_PASSES, lint_source,
+                                       run_ast_passes)
+from repro.analysis.hlo_passes import (HLO_PASSES, donation_audit,
+                                       hot_path_purity,
+                                       schedule_determinism_cell,
+                                       schedule_determinism_executor,
+                                       wire_dtype_policy)
+
+__all__ = [
+    "Report", "Violation", "iter_source_files", "suppressed_lines",
+    "AST_PASSES", "lint_source", "run_ast_passes",
+    "HLO_PASSES", "donation_audit", "hot_path_purity",
+    "schedule_determinism_cell", "schedule_determinism_executor",
+    "wire_dtype_policy",
+]

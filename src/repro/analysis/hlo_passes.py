@@ -1,0 +1,251 @@
+"""HLO passes over compiled (post-SPMD) programs.
+
+All four passes consume the artifacts :mod:`repro.launch.hlo` already
+parses, so they run identically on a dryrun matrix cell at 512 emulated
+devices and on a live :class:`~repro.exec.executor.MeshExecutor`:
+
+``collective-schedule-determinism``
+    The §3.1 tentpole invariant, generalized from the test fixture:
+    every RECTLR-recoverable survivor set's compiled step must carry the
+    byte-identical collective schedule of the healthy step at the same
+    ``S_A`` (:func:`schedule_determinism_executor`), and a cell program
+    must (a) keep the SPARe weight table a live entry parameter — a
+    constant-folded or pruned weight input means masking changed (or
+    never reached) the program — and (b) compile to the same schedule
+    twice (:func:`schedule_determinism_cell`).
+
+``donation-audit``
+    Cross-checks ``donate_argnums`` declarations against the module's
+    ``input_output_alias`` table. A donated-but-unaliased buffer is a
+    silent 2x memory cost on params/opt/EF state: jax deletes the
+    caller's buffer either way, but XLA allocates a fresh output.
+
+``hot-path-purity``
+    No host round-trips or fp64 in a step program: infeed/outfeed,
+    send/recv, host callbacks (``CustomCall`` into python), stateful
+    device RNG, and any ``f64``/``c128`` instruction are violations.
+
+``wire-dtype-policy``
+    The compressed sync's int8 payloads move through all-to-all /
+    all-gather only — a reducing collective (all-reduce,
+    reduce-scatter) over a narrow int dtype silently overflows at high
+    DP degree, so any <= 16-bit integer reduction is a violation. EF
+    residual state must stay fp32 (checked on the executor's state
+    specs, where dtypes are visible).
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis.core import Violation
+from repro.launch.hlo import HloCost, analyze_hlo, parse_module
+
+__all__ = ["HLO_PASSES", "donation_audit", "hot_path_purity",
+           "parse_input_output_alias", "entry_param_shapes",
+           "schedule_determinism_cell", "schedule_determinism_executor",
+           "wire_dtype_policy"]
+
+_ALIAS_ENTRY_RE = re.compile(r"\{[\d\s,]*\}:\s*\(\s*(\d+)\s*,\s*\{[\d\s,]*\}")
+_INT_REDUCE_DTYPES = {"s4", "u4", "s8", "u8", "s16", "u16", "pred"}
+_HOST_OPS = {"infeed", "outfeed", "send", "recv", "send-done", "recv-done",
+             "rng-get-and-update-state"}
+_CALLBACK_TARGET_RE = re.compile(
+    r'custom_call_target="([^"]*(?:callback|py_func|host)[^"]*)"', re.I)
+_WIDE_RE = re.compile(r"\b(f64|c128)\[")
+
+
+# ------------------------------------------------------------------ #
+# donation audit                                                     #
+# ------------------------------------------------------------------ #
+def parse_input_output_alias(hlo_text: str) -> list[int]:
+    """Aliased entry-parameter numbers from the module header's
+    ``input_output_alias={ {out}: (param, {path}, kind), ... }``."""
+    header = hlo_text.splitlines()[0] if hlo_text else ""
+    m = re.search(r"input_output_alias=\{", header)
+    if not m:
+        return []
+    # balance braces from the opening one
+    depth, i = 1, m.end()
+    while i < len(header) and depth:
+        if header[i] == "{":
+            depth += 1
+        elif header[i] == "}":
+            depth -= 1
+        i += 1
+    blob = header[m.end(): i - 1]
+    return sorted(int(g) for g in _ALIAS_ENTRY_RE.findall(blob))
+
+
+def entry_param_shapes(hlo_text: str) -> list[str]:
+    """Per-device entry parameter shapes (layout annotations stripped)
+    from ``entry_computation_layout={(p0, p1, ...)->...}``."""
+    header = hlo_text.splitlines()[0] if hlo_text else ""
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)->", header)
+    if not m:
+        return []
+    shapes = re.findall(r"([a-z0-9]+\[[\d,]*\])", m.group(1))
+    return shapes
+
+
+def donation_audit(hlo_text: str, donated_leaves: int, tag: str,
+                   donated_range: tuple[int, int] | None = None
+                   ) -> list[Violation]:
+    """``donated_leaves`` is the flat leaf count across all donated
+    argnums at this jit site (the driver knows the lowering args); the
+    compiled module must alias at least that many entry parameters to
+    outputs. ``donated_range`` optionally names the (start, stop) param
+    numbers the donated leaves occupy, for per-buffer attribution."""
+    aliased = parse_input_output_alias(hlo_text)
+    if donated_leaves <= len(aliased):
+        return []
+    params = entry_param_shapes(hlo_text)
+    missing = donated_leaves - len(aliased)
+    detail = ""
+    if donated_range is not None:
+        lo, hi = donated_range
+        gaps = [p for p in range(lo, min(hi, len(params)))
+                if p not in set(aliased)]
+        shapes = ", ".join(f"#{p}:{params[p]}" for p in gaps[:6])
+        if shapes:
+            detail = f" (unaliased: {shapes}{'...' if len(gaps) > 6 else ''})"
+    return [Violation(
+        tag, 0, "donation-audit",
+        f"{missing} of {donated_leaves} donated buffers have no "
+        f"input/output alias — each costs a duplicate allocation{detail}")]
+
+
+# ------------------------------------------------------------------ #
+# hot-path purity                                                    #
+# ------------------------------------------------------------------ #
+def hot_path_purity(hlo_text: str, tag: str) -> list[Violation]:
+    found: list[Violation] = []
+    comps, entry = parse_module(hlo_text)
+    for comp in comps.values():
+        for instr in comp.instrs:
+            base = instr.op.removesuffix("-start").removesuffix("-done")
+            if base in _HOST_OPS or instr.op in _HOST_OPS:
+                found.append(Violation(
+                    tag, 0, "hot-path-purity",
+                    f"host-transfer/stateful op {instr.op} "
+                    f"(%{instr.name}) inside the step program"))
+            elif instr.op == "custom-call":
+                m = _CALLBACK_TARGET_RE.search(instr.attrs)
+                if m:
+                    found.append(Violation(
+                        tag, 0, "hot-path-purity",
+                        f"host callback custom-call {m.group(1)!r} "
+                        f"(%{instr.name}) inside the step program"))
+            if any(dt in ("f64", "c128") for dt, _ in instr.out_shapes):
+                found.append(Violation(
+                    tag, 0, "hot-path-purity",
+                    f"fp64/c128 instruction %{instr.name} ({instr.op}) — "
+                    "step programs are bf16/fp32 only"))
+    return sorted(set(found))
+
+
+# ------------------------------------------------------------------ #
+# wire dtype policy                                                  #
+# ------------------------------------------------------------------ #
+def wire_dtype_policy(hlo: "str | HloCost", tag: str) -> list[Violation]:
+    cost = hlo if isinstance(hlo, HloCost) else analyze_hlo(hlo)
+    found = []
+    for (op, dt), moved in sorted(cost.collective_dtype_bytes.items()):
+        if op in ("all-reduce", "reduce-scatter") and \
+                dt in _INT_REDUCE_DTYPES:
+            found.append(Violation(
+                tag, 0, "wire-dtype-policy",
+                f"{op} over {dt} payload ({round(moved)} B) — compressed "
+                "payloads must move via all-to-all/all-gather and "
+                "accumulate in fp32 (overflow at high DP degree)"))
+    return found
+
+
+def ef_state_policy(executor, tag: str) -> list[Violation]:
+    """EF residuals must stay fp32 — quantizing the *residual* compounds
+    the quantization error instead of feeding it back."""
+    import jax
+    sync = getattr(executor, "_grad_sync", None)
+    state = getattr(executor, "_ef_state", None)
+    if sync is None or state is None:
+        return []
+    bad = [str(leaf.dtype) for leaf in jax.tree_util.tree_leaves(state)
+           if str(leaf.dtype) != "float32"]
+    if bad:
+        return [Violation(tag, 0, "wire-dtype-policy",
+                          f"EF residual leaves carry dtypes {sorted(set(bad))}"
+                          " — residual state must stay fp32")]
+    return []
+
+
+# ------------------------------------------------------------------ #
+# collective-schedule determinism                                    #
+# ------------------------------------------------------------------ #
+def _schedule(cost: HloCost) -> tuple:
+    return (tuple(sorted(cost.collective_counts.items())),
+            tuple(sorted((k, round(v)) for k, v in
+                         cost.collective_bytes.items())))
+
+
+def schedule_determinism_executor(executor, tag: str,
+                                  max_failures: int | None = None
+                                  ) -> tuple[list[Violation], int]:
+    """Certify masking-is-data over the FULL recoverable survivor space:
+    for every failure set RECTLR can mask, the executor's compiled step
+    under the recovered schedule must carry the collective schedule of
+    the healthy step at the same ``S_A``. Returns (violations,
+    n_certified)."""
+    from repro.core import SpareState
+    from repro.exec.equivalence import recoverable_failure_sets
+
+    n, r = executor.state.n, executor.state.r
+    healthy_sched: dict[int, tuple] = {}
+
+    def healthy(s_a: int) -> tuple:
+        if s_a not in healthy_sched:
+            st = SpareState(n, r)
+            st.s_a = s_a
+            healthy_sched[s_a] = _schedule(
+                analyze_hlo(executor.compiled_step_text(state=st)))
+        return healthy_sched[s_a]
+
+    found: list[Violation] = []
+    certified = 0
+    for victims, state in recoverable_failure_sets(n, r, max_failures):
+        got = _schedule(analyze_hlo(executor.compiled_step_text(state=state)))
+        want = healthy(state.s_a)
+        certified += 1
+        if got != want:
+            found.append(Violation(
+                tag, 0, "collective-schedule-determinism",
+                f"survivor set (victims={list(victims)}, S_A={state.s_a}) "
+                f"compiles to a different collective schedule than the "
+                f"healthy step: {got} != {want}"))
+    return found, certified
+
+
+def schedule_determinism_cell(text_a: str, text_b: str, tag: str,
+                              weights_shape: str | None = None
+                              ) -> list[Violation]:
+    """Cell-level certification: two independent compiles of the same
+    lowering must produce one collective schedule, and the SPARe weight
+    table must be a live entry parameter (``weights_shape`` is the
+    expected per-device shape string, e.g. ``"f32[2,4]"``)."""
+    found = []
+    sa, sb = _schedule(analyze_hlo(text_a)), _schedule(analyze_hlo(text_b))
+    if sa != sb:
+        found.append(Violation(
+            tag, 0, "collective-schedule-determinism",
+            f"two compiles of one lowering disagree on the collective "
+            f"schedule: {sa} != {sb}"))
+    if weights_shape is not None:
+        if weights_shape not in entry_param_shapes(text_a):
+            found.append(Violation(
+                tag, 0, "collective-schedule-determinism",
+                f"SPARe weight table ({weights_shape}) is not a live "
+                "entry parameter — masking was folded into or pruned "
+                "out of the program"))
+    return found
+
+
+HLO_PASSES = ("collective-schedule-determinism", "donation-audit",
+              "hot-path-purity", "wire-dtype-policy")

@@ -90,11 +90,18 @@ def _flatten_with_names(tree: Any) -> list[tuple[str, np.ndarray]]:
     return out
 
 
-def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
+def save_checkpoint(directory: str | Path, step: int, tree: Any, *,
+                    clock=time.time) -> Path:
     """Write one checkpoint: <dir>/step_<n>/{shard_*.npz, manifest.json}.
 
     bfloat16 (an ml_dtypes extension numpy can't serialize) is stored as a
     uint16 bit-view with the true dtype recorded in the manifest.
+
+    ``clock`` supplies the manifest's provenance timestamp (wall clock by
+    default). It is the ONLY nondeterministic input: with a fixed clock,
+    re-saving the same tree is byte-identical — npz payloads included —
+    which is what lets restore tests and content-addressed storage
+    compare checkpoints by bytes.
     """
     d = Path(directory) / f"step_{step:08d}"
     tmp = _tmp_dir(Path(directory), step)
@@ -116,7 +123,7 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
         "step": step,
         "leaves": names,
         "dtypes": dtypes,
-        "time": time.time(),
+        "time": clock(),
         "format": "npz-v1",
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -188,8 +195,9 @@ class CheckpointManager:
 
     def __init__(self, directory: str | Path, *, n_groups: int,
                  redundancy: int, mtbf: float, t_save: float,
-                 t_restart: float, keep: int = 3):
+                 t_restart: float, keep: int = 3, clock=time.time):
         self.directory = Path(directory)
+        self.clock = clock              # manifest provenance timestamps
         if self.directory.exists():
             sweep_stale_tmp(self.directory)  # crash leftovers from prior runs
         self.keep = keep
@@ -224,7 +232,8 @@ class CheckpointManager:
         host_tree = jax.tree.map(np.asarray, tree)   # device -> host copy
 
         def work():
-            save_checkpoint(self.directory, step, host_tree)
+            save_checkpoint(self.directory, step, host_tree,
+                            clock=self.clock)
             self._gc()
 
         self._thread = threading.Thread(target=work, daemon=True)

@@ -243,6 +243,12 @@ class MeshExecutor(SpareTrainer):
         return fn   # gspmd: sharding comes from jit in/out shardings
 
     def _compiled(self, s_a: int, report: TrainReport | None = None):
+        # Donation contract (analyzer-enforced): params, opt_state, and —
+        # under int8_ef — the EF residuals are donated, and every donated
+        # leaf must surface as an input/output alias in the compiled
+        # module. ``python -m repro.launch.lint`` replays this jit site
+        # via ``compiled_step_text`` and fails CI on any unaliased
+        # donated buffer (repro.analysis donation-audit pass).
         if s_a not in self._jitted:
             out_shardings = ((self._pshard, self._oshard, None)
                              if self.sync == "gspmd" else None)
@@ -496,6 +502,16 @@ class MeshExecutor(SpareTrainer):
         if self.grad_compress:
             args.append(self._ef_state)
         return fn.lower(*args).compile().as_text()
+
+    def donated_leaves(self) -> int:
+        """Flat leaf count across the step's donated argnums — the
+        number of input/output aliases the donation-audit pass expects
+        in :meth:`compiled_step_text`'s module header."""
+        n = len(jax.tree_util.tree_leaves(self.params)) + \
+            len(jax.tree_util.tree_leaves(self.opt_state))
+        if self.grad_compress:
+            n += len(jax.tree_util.tree_leaves(self._ef_state))
+        return n
 
     @property
     def compiled_depths(self) -> list[int]:

@@ -104,9 +104,22 @@ def model_flops_per_device(cfg, shape, n_devices: int) -> float:
     return 2.0 * n_active * shape.global_batch / n_devices
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             s_a: int = 1, variant: str = "baseline",
-             overrides: dict | None = None) -> dict:
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               s_a: int = 1, overrides: dict | None = None):
+    """Lower one cell's production jit-site and return ``(lowered,
+    meta)``. This is THE jit call the sweep certifies — ``run_cell``
+    compiles it for the roofline record, and the static analyzer
+    (``repro.analysis`` via ``python -m repro.launch.lint``) re-lowers
+    it to audit donation aliasing, hot-path purity, wire dtypes, and
+    collective-schedule determinism on the byte-identical program.
+
+    ``meta`` carries what the HLO passes need but the compiled text
+    alone cannot recover: the per-argument flat leaf counts
+    (``arg_leaves``), the donated argnums, and the expected per-device
+    shape of the SPARe weight-table input (``weights_shape``, train
+    cells only — the liveness check that proves masking reaches the
+    program as runtime data).
+    """
     cfg = get_config(arch)
     attn_chunk = 1024
     if overrides:
@@ -115,17 +128,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         if overrides:
             cfg = cfg.scaled(**overrides)
     shape = SHAPES[shape_name]
-    mesh_name = "2x16x16" if multi_pod else "16x16"
-    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-                 "variant": variant, "s_a": s_a, "ok": False}
     ok_run, why = applicable(cfg, shape)
     if not ok_run:
-        rec.update(skipped=True, reason=why, ok=True)
-        return rec
+        return None, {"skipped": True, "reason": why}
 
-    t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
-    n_dev = mesh.size
     model = build_model(cfg, mesh=mesh, dp_axes=dp_axes(multi_pod),
                         attn_chunk=attn_chunk)
 
@@ -135,7 +142,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     batch, bspec_tree = input_specs(cfg, shape, mesh, multi_pod, s_a)
     b_shard = {k: NamedSharding(mesh, v) for k, v in bspec_tree.items()}
+    n_leaves = lambda t: len(jax.tree_util.tree_leaves(t))  # noqa: E731
 
+    meta = {"devices": mesh.size, "kind": shape.kind}
     with mesh:
         if shape.kind == "train":
             opt_shapes = jax.eval_shape(
@@ -153,6 +162,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                              out_shardings=(p_shard, o_shard, None),
                              donate_argnums=(0, 1))
             lowered = jitted.lower(p_shapes, opt_shapes, batch)
+            from repro.launch.mesh import dp_degree
+            w = batch["weights"]
+            meta.update(
+                donate=(0, 1),
+                arg_leaves=[n_leaves(p_shapes), n_leaves(opt_shapes),
+                            n_leaves(batch)],
+                weights_shape=(f"f32[{w.shape[0]},"
+                               f"{w.shape[1] // dp_degree(mesh, multi_pod)}]"))
         elif shape.kind == "prefill":
             fn = make_prefill(model)
             jitted = jax.jit(fn, in_shardings=(p_shard, b_shard.get("tokens"),
@@ -160,6 +177,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                              out_shardings=None)
             lowered = jitted.lower(p_shapes, batch.get("tokens"),
                                    batch.get("embeds"))
+            meta.update(donate=(), arg_leaves=[
+                n_leaves(p_shapes), n_leaves(batch.get("tokens")),
+                n_leaves(batch.get("embeds"))], weights_shape=None)
         else:  # decode
             cache_shapes = jax.eval_shape(
                 lambda: model.init_decode_state(shape.global_batch, shape.seq))
@@ -175,10 +195,36 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             lowered = jitted.lower(p_shapes, cache_shapes,
                                    jax.ShapeDtypeStruct((), jnp.int32),
                                    batch.get("tokens"), batch.get("embeds"))
-        rec["lower_s"] = round(time.time() - t0, 1)
-        t1 = time.time()
-        compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t1, 1)
+            meta.update(donate=(1,), arg_leaves=[
+                n_leaves(p_shapes), n_leaves(cache_shapes), 1,
+                n_leaves(batch.get("tokens")),
+                n_leaves(batch.get("embeds"))], weights_shape=None)
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             s_a: int = 1, variant: str = "baseline",
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides and any(k != "__attn_chunk" for k in overrides):
+        cfg = cfg.scaled(**{k: v for k, v in overrides.items()
+                            if k != "__attn_chunk"})
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "variant": variant, "s_a": s_a, "ok": False}
+
+    t0 = time.perf_counter()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod, s_a=s_a,
+                               overrides=overrides)
+    if lowered is None:
+        rec.update(skipped=True, reason=meta["reason"], ok=True)
+        return rec
+    n_dev = meta["devices"]
+    rec["lower_s"] = round(time.perf_counter() - t0, 1)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.perf_counter() - t1, 1)
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()

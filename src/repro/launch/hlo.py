@@ -330,41 +330,57 @@ def _cost_of(comp_name: str, comps: dict[str, Computation],
         if base_op in _COLLECTIVES:
             if flops_only or op.endswith("-done"):
                 continue
-            out_b = _shape_bytes(instr.out_shapes)
-            # async-start outputs include carried operands: halve the tuple
+            # per-dtype byte accounting: a multi-operand collective has a
+            # TUPLE output (e.g. `(s8[1024], f32[8]) all-reduce(...)` for
+            # a compressed payload + its scales), and each element's
+            # bytes must land under its OWN dtype — keying everything on
+            # the first element would silently misfile the mix.
+            per_dtype: dict[str, int] = {}
+            for dt, dims in instr.out_shapes:
+                n = 1
+                for d in dims:
+                    n *= d
+                per_dtype[dt] = per_dtype.get(dt, 0) + n * _DTYPE_BYTES[dt]
+            # async-start outputs carry the operands alongside the
+            # results: halve each dtype's share (the tuple repeats every
+            # element once as input, once as output)
             if op.endswith("-start"):
-                out_b = out_b // 2
+                per_dtype = {dt: b // 2 for dt, b in per_dtype.items()}
             # XLA:CPU float-normalization promotes bf16 collectives to f32
             # (promoted reduction computations / converts hoisted before
             # the collective); XLA:TPU moves bf16 natively — count wire
-            # bytes at the logical width. Only an f32 payload can be a
+            # bytes at the logical width. Only the f32 SHARE can be a
             # promoted bf16 one: int8 compressed payloads also come out
             # of a convert fusion (f32 -> s8 quantize) and must NOT be
-            # halved.
-            dt = instr.out_shapes[0][0] if instr.out_shapes else "?"
-            promoted = dt == "f32" and "_promoted" in instr.attrs
-            if not promoted and dt == "f32" and instr.operands:
+            # halved, so non-f32 tuple elements keep their width.
+            promoted = "f32" in per_dtype and "_promoted" in instr.attrs
+            if not promoted and "f32" in per_dtype and instr.operands:
                 producer = comp.by_name.get(instr.operands[0])
                 if producer is not None and (
                         producer.op == "convert"
                         or "convert" in producer.name):
                     promoted = True
             if promoted:
-                out_b //= 2
+                # logical width the wire actually moves
+                per_dtype["bf16"] = per_dtype.get("bf16", 0) + \
+                    per_dtype.pop("f32") // 2
             if base_op == "all-reduce":
-                moved = 2.0 * out_b
+                mult = 2.0
             elif base_op == "reduce-scatter":
-                moved = float(out_b) * _group_size(instr.attrs)
+                mult = float(_group_size(instr.attrs))
             else:
-                moved = float(out_b)
+                mult = 1.0
+            moved_total = 0.0
+            for dt, b in per_dtype.items():
+                moved = mult * b
+                moved_total += moved
+                cost.collective_dtype_bytes[(base_op, dt)] = \
+                    cost.collective_dtype_bytes.get((base_op, dt), 0.0) \
+                    + moved
             cost.collective_bytes[base_op] = \
-                cost.collective_bytes.get(base_op, 0.0) + moved
+                cost.collective_bytes.get(base_op, 0.0) + moved_total
             cost.collective_counts[base_op] = \
                 cost.collective_counts.get(base_op, 0) + 1
-            if promoted:
-                dt = "bf16"       # logical width the wire actually moves
-            cost.collective_dtype_bytes[(base_op, dt)] = \
-                cost.collective_dtype_bytes.get((base_op, dt), 0.0) + moved
             continue  # ICI traffic — keep out of the HBM bytes term
 
         if not flops_only and op not in _NO_BYTES and op != "reshape":

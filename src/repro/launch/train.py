@@ -222,10 +222,10 @@ def main() -> None:
         injector = PoissonInjector(args.mtbf_steps, seed=args.seed)
     else:
         injector = None
-    t0 = time.time()
+    t0 = time.perf_counter()
     rep = trainer.run(args.steps, injector=injector,
                       verify_equivalence=args.verify_equivalence)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"[train] done: {rep.steps_done} steps in {dt:.1f}s "
           f"({dt / max(rep.steps_done, 1):.2f}s/step)")
     print(f"[train] loss {rep.losses[0]:.4f} -> {rep.losses[-1]:.4f} | "

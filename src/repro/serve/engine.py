@@ -66,10 +66,18 @@ class ExecutableCache:
     registry's ``serve.exec_cache.misses`` / ``.hits`` entries, so a
     metrics snapshot and this cache can never disagree (the serve CLI's
     frozen-recompiles gate checks the snapshot).
+
+    Each build site declares how many flat buffer leaves it donates
+    (``donated_leaves``); the static analyzer (``repro.analysis``, run
+    via ``python -m repro.launch.lint``) replays :meth:`programs` and
+    cross-checks every declaration against the compiled module's
+    ``input_output_alias`` table — the donation contract here is
+    analyzer-enforced, not just documented.
     """
 
     def __init__(self, metrics=None):
         self._exe: dict[tuple, object] = {}
+        self._donated: dict[tuple, int] = {}
         if metrics is None:
             self._misses = Counter()
             self._hits = Counter()
@@ -85,14 +93,21 @@ class ExecutableCache:
     def hits(self) -> int:
         return self._hits.value
 
-    def get(self, key: tuple, build):
+    def get(self, key: tuple, build, donated_leaves: int = 0):
         exe = self._exe.get(key)
         if exe is None:
             self._misses.inc()
             exe = self._exe[key] = build()
+            self._donated[key] = donated_leaves
         else:
             self._hits.inc()
         return exe
+
+    def programs(self):
+        """``(key, hlo_text, donated_leaves)`` per cached executable —
+        the donation-audit surface for ``repro.analysis``."""
+        for key in sorted(self._exe):
+            yield key, self._exe[key].as_text(), self._donated.get(key, 0)
 
     @property
     def keys(self) -> list[tuple]:
@@ -168,7 +183,9 @@ class ServeEngine:
             return jax.jit(
                 lambda p, s, t, pos, tok: fn(p, s, t, pos, tokens=tok),
                 donate_argnums=(1,)).lower(*args).compile()
-        return self.cache.get(("decode",), build)
+        return self.cache.get(
+            ("decode",), build,
+            donated_leaves=len(jax.tree_util.tree_leaves(self.pools)))
 
     def _prefill_exe(self, length: int):
         if length not in self.buckets:
@@ -193,7 +210,9 @@ class ServeEngine:
             pages = jnp.zeros((n_alloc,), jnp.int32)
             return jax.jit(self._writer, donate_argnums=(0,)).lower(
                 self.pools, dense, pages, jnp.int32(0)).compile()
-        return self.cache.get(("write", length), build)
+        return self.cache.get(
+            ("write", length), build,
+            donated_leaves=len(jax.tree_util.tree_leaves(self.pools)))
 
     def warmup(self) -> None:
         """Compile every executable this engine can ever need. After

@@ -1,0 +1,324 @@
+"""repro.analysis: every pass must fire on a violating fixture and stay
+quiet on a known-good one — a lint that can't fail proves nothing.
+
+AST fixtures are inline sources through :func:`lint_source`; HLO
+fixtures are hand-written module texts (no jax compile needed), plus a
+fake executor that exercises the survivor-sweep driver logic.
+"""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import (Report, Violation, lint_source,
+                            run_ast_passes)
+from repro.analysis.core import iter_source_files, suppressed_lines
+from repro.analysis.hlo_passes import (donation_audit, ef_state_policy,
+                                       entry_param_shapes, hot_path_purity,
+                                       parse_input_output_alias,
+                                       schedule_determinism_cell,
+                                       schedule_determinism_executor,
+                                       wire_dtype_policy)
+
+
+def _rules(src: str) -> set[str]:
+    kept, _ = lint_source("fixture.py", textwrap.dedent(src))
+    return {v.rule for v in kept}
+
+
+# ------------------------------------------------------------------ #
+# determinism lint                                                   #
+# ------------------------------------------------------------------ #
+def test_wall_clock_fires_and_good_is_quiet():
+    assert "wall-clock" in _rules("""
+        import time
+        t0 = time.time()
+    """)
+    assert "wall-clock" in _rules("""
+        from datetime import datetime
+        stamp = datetime.now()
+    """)
+    assert _rules("""
+        import time
+        t0 = time.perf_counter()
+        t1 = time.monotonic()
+    """) == set()
+
+
+def test_unseeded_random_fires_and_generator_is_quiet():
+    assert "unseeded-random" in _rules("""
+        import random
+        x = random.choice([1, 2])
+    """)
+    assert "unseeded-random" in _rules("""
+        import numpy as np
+        x = np.random.rand(3)
+    """)
+    assert _rules("""
+        import numpy as np
+        rng = np.random.default_rng(7)
+        x = rng.normal(size=3)
+    """) == set()
+
+
+def test_set_iteration_and_builtin_hash():
+    assert "set-iteration" in _rules("""
+        for x in {1, 2, 3}:
+            print(x)
+    """)
+    assert "builtin-hash" in _rules("""
+        key = hash("name")
+    """)
+    assert _rules("""
+        for x in sorted({1, 2, 3}):
+            print(x)
+    """) == set()
+
+
+def test_mutable_default_function_and_dataclass():
+    assert "mutable-default" in _rules("""
+        def f(xs=[]):
+            return xs
+    """)
+    assert "mutable-default" in _rules("""
+        from dataclasses import dataclass
+        @dataclass
+        class C:
+            xs: list = []
+    """)
+    assert _rules("""
+        from dataclasses import dataclass, field
+        @dataclass
+        class C:
+            xs: list = field(default_factory=list)
+    """) == set()
+
+
+# ------------------------------------------------------------------ #
+# thread-sharing audit                                               #
+# ------------------------------------------------------------------ #
+def test_thread_target_writing_self_attr_fires():
+    assert "thread-shared-state" in _rules("""
+        import threading
+        class W:
+            def start(self):
+                self._t = threading.Thread(target=self._work)
+            def _work(self):
+                self.result = 1
+    """)
+
+
+def test_thread_closure_nonlocal_rebind_fires():
+    assert "thread-shared-state" in _rules("""
+        def run(pool):
+            done = False
+            def work():
+                nonlocal done
+                done = True
+            pool.submit(work)
+    """)
+
+
+def test_late_binding_capture_fires():
+    assert "thread-shared-state" in _rules("""
+        def run(pool):
+            item = 1
+            def work():
+                return item
+            pool.submit(work)
+            item = 2
+    """)
+
+
+def test_snapshot_at_submit_is_quiet():
+    # the sanctioned pattern: pass state by argument at submit time
+    assert _rules("""
+        def run(pool, items):
+            snapshot = list(items)
+            def work(data):
+                return sum(data)
+            pool.submit(work, snapshot)
+    """) == set()
+
+
+# ------------------------------------------------------------------ #
+# suppression + robustness                                           #
+# ------------------------------------------------------------------ #
+def test_inline_suppression_diverts_finding():
+    src = textwrap.dedent("""
+        import time
+        t0 = time.time()  # lint: ignore[wall-clock] -- provenance stamp
+    """)
+    kept, quiet = lint_source("fixture.py", src)
+    assert [v.rule for v in kept] == []
+    assert [v.rule for v in quiet] == ["wall-clock"]
+
+
+def test_suppression_is_rule_scoped():
+    src = textwrap.dedent("""
+        import time
+        t0 = time.time()  # lint: ignore[unseeded-random]
+    """)
+    kept, quiet = lint_source("fixture.py", src)
+    assert [v.rule for v in kept] == ["wall-clock"]   # wrong rule named
+    assert quiet == []
+
+
+def test_skip_file_exempts_everything():
+    src = "# lint: skip-file\nimport time\nt0 = time.time()\n"
+    assert lint_source("vendored.py", src) == ([], [])
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    kept, _ = lint_source("broken.py", "def f(:\n")
+    assert [v.rule for v in kept] == ["parse-error"]
+
+
+def test_suppressed_lines_parses_multi_rule():
+    src = "x = 1  # lint: ignore[wall-clock, builtin-hash]\n"
+    assert suppressed_lines(src) == {1: {"wall-clock", "builtin-hash"}}
+
+
+# ------------------------------------------------------------------ #
+# HLO passes on hand-written programs                                #
+# ------------------------------------------------------------------ #
+_ALIASED_HEADER = (
+    'HloModule jit_step, input_output_alias={ {0}: (0, {}, may-alias), '
+    '{1}: (1, {}, may-alias) }, entry_computation_layout='
+    '{(f32[4,4], f32[4,4], f32[2,4])->(f32[4,4], f32[4,4])}\n')
+
+
+def _hlo(header: str, body: str = "") -> str:
+    return (header + "\nENTRY %main (p0: f32[4,4]) -> f32[4,4] {\n"
+            "  %p0 = f32[4,4] parameter(0)\n" + body +
+            "  ROOT %r = f32[4,4] add(%p0, %p0)\n}\n")
+
+
+def test_alias_header_parsing():
+    assert parse_input_output_alias(_ALIASED_HEADER) == [0, 1]
+    assert entry_param_shapes(_ALIASED_HEADER) == \
+        ["f32[4,4]", "f32[4,4]", "f32[2,4]"]
+
+
+def test_donation_audit_fires_on_unaliased_and_passes_on_aliased():
+    text = _hlo(_ALIASED_HEADER)
+    assert donation_audit(text, 2, "prog") == []          # 2 donated, 2 aliased
+    found = donation_audit(text, 3, "prog", donated_range=(0, 3))
+    assert [v.rule for v in found] == ["donation-audit"]
+    assert "f32[2,4]" in found[0].message                 # names the gap
+
+
+def test_hot_path_purity_fires_on_host_ops_and_f64():
+    clean = _hlo(_ALIASED_HEADER)
+    assert hot_path_purity(clean, "prog") == []
+    outfeed = _hlo(_ALIASED_HEADER,
+                   "  %of = token[] outfeed(%p0, %p0)\n")
+    assert any(v.rule == "hot-path-purity" for v in
+               hot_path_purity(outfeed, "prog"))
+    callback = _hlo(_ALIASED_HEADER,
+                    '  %cb = f32[4,4] custom-call(%p0), '
+                    'custom_call_target="xla_python_cpu_callback"\n')
+    assert any("callback" in v.message for v in
+               hot_path_purity(callback, "prog"))
+    wide = _hlo(_ALIASED_HEADER, "  %w = f64[4,4] convert(%p0)\n")
+    assert any("fp64" in v.message for v in hot_path_purity(wide, "prog"))
+
+
+def test_wire_dtype_policy_fires_on_int_reduction_only():
+    bad = _hlo(_ALIASED_HEADER,
+               "  %q = s8[64] convert(%p0)\n"
+               "  %ar = s8[64] all-reduce(%q), replica_groups={{0,1}}, "
+               "to_apply=%add\n")
+    assert [v.rule for v in wire_dtype_policy(bad, "prog")] == \
+        ["wire-dtype-policy"]
+    ok = _hlo(_ALIASED_HEADER,
+              "  %q = s8[64] convert(%p0)\n"
+              "  %a2a = s8[64] all-to-all(%q), replica_groups={{0,1}}, "
+              "dimensions={0}\n")
+    assert wire_dtype_policy(ok, "prog") == []
+
+
+def test_ef_state_policy_on_fake_executor():
+    import numpy as np
+
+    class Fake:
+        _grad_sync = object()
+        _ef_state = {"bucket0": np.zeros(4, np.float32)}
+
+    assert ef_state_policy(Fake(), "ex") == []
+    Fake._ef_state = {"bucket0": np.zeros(4, np.float16)}
+    assert [v.rule for v in ef_state_policy(Fake(), "ex")] == \
+        ["wire-dtype-policy"]
+
+
+def _ar(dtype: str, dims: str) -> str:
+    return (f"  %ar = {dtype}[{dims}] all-reduce(%p0), "
+            "replica_groups={{0,1}}, to_apply=%add\n")
+
+
+def test_schedule_determinism_cell_double_compile_and_liveness():
+    a = _hlo(_ALIASED_HEADER, _ar("f32", "4,4"))
+    b = _hlo(_ALIASED_HEADER, _ar("f32", "4,4") + _ar("f32", "4,4"))
+    assert schedule_determinism_cell(a, a, "cell") == []
+    assert any("different" in v.message or "disagree" in v.message
+               for v in schedule_determinism_cell(a, b, "cell"))
+    # weight-table liveness: f32[2,4] is an entry param, f32[9,9] is not
+    assert schedule_determinism_cell(a, a, "cell",
+                                     weights_shape="f32[2,4]") == []
+    found = schedule_determinism_cell(a, a, "cell",
+                                      weights_shape="f32[9,9]")
+    assert any("live entry parameter" in v.message for v in found)
+
+
+def test_schedule_determinism_executor_sweep():
+    """The survivor-sweep driver on a fake executor: a schedule that
+    depends on WHICH group failed (not just S_A) must be caught."""
+    from repro.core import SpareState
+
+    class FakeExec:
+        def __init__(self, poisoned_victim=None):
+            self.state = SpareState(4, 2)
+            self.poisoned = poisoned_victim
+
+        def compiled_step_text(self, state=None):
+            dead = sorted(set(range(4)) - set(state.survivors))
+            if self.poisoned is not None and self.poisoned in dead:
+                return _hlo(_ALIASED_HEADER, _ar("f32", "4,4") * 2)
+            return _hlo(_ALIASED_HEADER, _ar("f32", "4,4"))
+
+    clean, n = schedule_determinism_executor(FakeExec(), "ex")
+    assert clean == [] and n > 0
+    dirty, _ = schedule_determinism_executor(FakeExec(poisoned_victim=2),
+                                             "ex")
+    assert any(v.rule == "collective-schedule-determinism" for v in dirty)
+
+
+# ------------------------------------------------------------------ #
+# report plumbing                                                    #
+# ------------------------------------------------------------------ #
+def test_repo_walk_and_json_report_are_deterministic(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "mod.py").write_text(
+        "import time\nt0 = time.time()\n")
+    (tmp_path / "src" / "ok.py").write_text("x = 1\n")
+    assert [p.name for p in iter_source_files(tmp_path)] == \
+        ["mod.py", "ok.py"]
+
+    r1 = run_ast_passes(tmp_path)
+    r2 = run_ast_passes(tmp_path)
+    assert not r1.clean
+    assert r1.to_json() == r2.to_json()          # byte-identical reports
+    payload = json.loads(r1.to_json())
+    assert payload["violations"][0]["rule"] == "wall-clock"
+    assert payload["summary"]["ast"]["files_scanned"] == 2
+
+
+def test_report_merge_json_roundtrip():
+    child = Report()
+    child.extend([Violation("prog", 0, "donation-audit", "boom")])
+    child.note("donation-audit", donated_leaves_audited=5)
+    parent = Report()
+    parent.merge_json(child.to_json())
+    parent.merge_json(child.to_json())
+    assert len(parent.violations) == 2
+    assert parent.summary["donation-audit"]["donated_leaves_audited"] == 10

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo import analyze_hlo, parse_module
+from repro.launch.hlo import analyze_hlo, parse_module, wire_byte_ratio
 
 
 def _compile(fn, *args):
@@ -67,6 +67,93 @@ def test_bytes_written_leq_accessed():
     x = jnp.zeros((64, 64), jnp.float32)
     c = analyze_hlo(_compile(lambda a: jnp.tanh(a @ a).sum(), x))
     assert 0 < c.bytes_written <= c.bytes_accessed
+
+
+def _module(body: str, params: str = "p0: f32[1024]",
+            ret: str = "f32[1024]") -> str:
+    """Minimal hand-written HLO module around ``body`` instructions."""
+    return (f"HloModule handwritten\n\n"
+            f"ENTRY %main ({params}) -> {ret} {{\n{body}\n}}\n")
+
+
+def test_collective_dtype_bytes_handwritten():
+    txt = _module(
+        "  %p0 = f32[1024] parameter(0)\n"
+        "  ROOT %ar = f32[1024] all-reduce(%p0), "
+        "replica_groups={{0,1,2,3}}, to_apply=%add")
+    c = analyze_hlo(txt)
+    # ring all-reduce moves ~2x the buffer
+    assert c.collective_dtype_bytes == {("all-reduce", "f32"): 8192.0}
+    assert c.collective_bytes == {"all-reduce": 8192.0}
+    assert c.collective_counts == {"all-reduce": 1}
+
+
+def test_collective_dtype_bytes_tuple_shaped():
+    """A multi-operand collective has a TUPLE output; each element's
+    bytes must land under its own dtype (the compressed sync's int8
+    payload + fp32 scales pattern), not all under the first element."""
+    txt = _module(
+        "  %q = s8[1024] parameter(0)\n"
+        "  %s = f32[8] parameter(1)\n"
+        "  ROOT %ar = (s8[1024], f32[8]) all-reduce(%q, %s), "
+        "replica_groups={{0,1}}, to_apply=%add",
+        params="q: s8[1024], s: f32[8]", ret="(s8[1024], f32[8])")
+    c = analyze_hlo(txt)
+    assert c.collective_dtype_bytes == {("all-reduce", "s8"): 2048.0,
+                                        ("all-reduce", "f32"): 64.0}
+    assert c.collective_bytes == {"all-reduce": 2112.0}
+
+
+def test_collective_async_start_halves_each_dtype():
+    txt = _module(
+        "  %p0 = f32[256] parameter(0)\n"
+        "  %ars = (f32[256], f32[256]) all-reduce-start(%p0), "
+        "replica_groups={{0,1}}, to_apply=%add\n"
+        "  ROOT %ard = f32[256] all-reduce-done(%ars)",
+        params="p0: f32[256]", ret="f32[256]")
+    c = analyze_hlo(txt)
+    # start tuple carries operand+result: one logical 1024 B buffer, 2x ring
+    assert c.collective_dtype_bytes == {("all-reduce", "f32"): 2048.0}
+    assert c.collective_counts == {"all-reduce": 1}   # -done not re-counted
+
+
+def test_reduce_scatter_scales_with_group_size():
+    txt = _module(
+        "  %p0 = f32[1024] parameter(0)\n"
+        "  ROOT %rs = f32[256] reduce-scatter(%p0), "
+        "replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add")
+    c = analyze_hlo(txt)
+    assert c.collective_dtype_bytes == {("reduce-scatter", "f32"): 4096.0}
+
+
+def test_promoted_bf16_halves_only_f32_share():
+    """XLA:CPU promotes bf16 collectives to f32 via a hoisted convert;
+    the wire moves the logical bf16 width. An int element riding the
+    same tuple keeps its own width — it must NOT be halved."""
+    txt = _module(
+        "  %pb = bf16[512] parameter(0)\n"
+        "  %q = s8[64] parameter(1)\n"
+        "  %cvt = f32[512] convert(%pb)\n"
+        "  ROOT %ar = (f32[512], s8[64]) all-reduce(%cvt, %q), "
+        "replica_groups={{0,1}}, to_apply=%add",
+        params="pb: bf16[512], q: s8[64]", ret="(f32[512], s8[64])")
+    c = analyze_hlo(txt)
+    assert c.collective_dtype_bytes == {("all-reduce", "bf16"): 2048.0,
+                                        ("all-reduce", "s8"): 128.0}
+
+
+def test_wire_byte_ratio_handwritten():
+    baseline = _module(
+        "  %p0 = f32[1024] parameter(0)\n"
+        "  ROOT %ar = f32[1024] all-reduce(%p0), "
+        "replica_groups={{0,1}}, to_apply=%add")
+    compressed = _module(
+        "  %q = s8[1024] parameter(0)\n"
+        "  ROOT %a2a = s8[1024] all-to-all(%q), replica_groups={{0,1}}, "
+        "dimensions={0}", params="q: s8[1024]", ret="s8[1024]")
+    # 1024 B one-shot vs 2 * 4096 B ring all-reduce
+    assert wire_byte_ratio(compressed, baseline) == pytest.approx(0.125)
+    assert wire_byte_ratio(baseline, baseline) == pytest.approx(1.0)
 
 
 def test_collective_detection_spmd():
