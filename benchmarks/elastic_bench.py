@@ -1,0 +1,147 @@
+"""Elastic recovery-tier benchmark: mask vs reshape vs restart TTT.
+
+Runs the third-regime campaign (``repro.scenarios.campaign
+.elastic_regime_cells``) on the live emulated mesh: the SAME
+deterministic failure clock hits the three recovery tiers and the arms
+are compared on work-normalized time-to-train —
+
+* ``mask`` — single-group kill, RECTLR masks it at full DP (free tier);
+* ``reshape`` — an unmaskable adjacent pair on the elastic executor:
+  the live TTT policy continues degraded on a survivor submesh, zero
+  wipe-outs, one extra executable (the new mesh shape);
+* ``restart`` — the identical unmaskable pair on the plain executor:
+  rollback + modeled cluster restart, the only pre-elastic option.
+
+The reshape arm is traced; the record carries the ``launch.obs``
+recovery-attribution rows so the ``reshape`` kind shows up as numbers
+in the same table that attributes masks and restarts.
+
+Appends one record per invocation to ``BENCH_elastic.json`` at the repo
+root. ``--assert-elastic`` is the CI gate: the reshape arm must finish
+with zero wipe-outs, at most one recompile beyond the new mesh-shape
+entry, a lower modeled TTT than the restart arm, and a ``reshape`` row
+in the attribution table.
+
+Usage:
+  python benchmarks/elastic_bench.py [--steps 24] [--n-groups 8]
+      [--fail-step 8] [--seconds-per-step 64] [--t-reshape 60]
+      [--t-restart 3600] [--grad-compress none|int8_ef]
+      [--assert-elastic] [--arch qwen2.5-3b]
+"""
+import argparse
+import json
+import os
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def force_device_count(n: int) -> None:
+    """Append the host-platform fan-out to XLA_FLAGS (preserving any
+    flags already set) — must run before the first jax import."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    existing = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in existing:
+        os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--n-groups", type=int, default=8)
+    ap.add_argument("--redundancy", type=int, default=2)
+    ap.add_argument("--model-degree", type=int, default=1)
+    ap.add_argument("--fail-step", type=int, default=8)
+    ap.add_argument("--seconds-per-step", type=float, default=64.0)
+    ap.add_argument("--t-reshape", type=float, default=60.0)
+    ap.add_argument("--t-restart", type=float, default=3600.0)
+    ap.add_argument("--grad-compress", default="int8_ef",
+                    choices=("none", "int8_ef"))
+    ap.add_argument("--assert-elastic", action="store_true",
+                    help="fail unless the reshape arm continues degraded "
+                         "with zero wipe-outs and beats the restart arm's "
+                         "modeled TTT")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_elastic.json"))
+    args = ap.parse_args()
+
+    force_device_count(args.n_groups * args.model_degree)
+
+    from repro.launch import obs as obs_cli
+    from repro.obs import load_trace
+    from repro.scenarios.campaign import (elastic_regime_cells,
+                                          run_elastic_cell)
+
+    compress = None if args.grad_compress == "none" else args.grad_compress
+    with tempfile.TemporaryDirectory(prefix="elastic-bench-") as td:
+        cells = elastic_regime_cells(
+            arch=args.arch, n=args.n_groups, r=args.redundancy,
+            steps=args.steps, fail_step=args.fail_step,
+            model_degree=args.model_degree,
+            seconds_per_step=args.seconds_per_step,
+            t_reshape=args.t_reshape, t_restart=args.t_restart,
+            grad_compress=compress, trace_dir=td)
+        rows = {}
+        attribution = None
+        for cell in cells:
+            row = run_elastic_cell(cell)
+            rows[row["arm"]] = row
+            print(f"[elastic] {row['arm']:>7}: dp {args.n_groups}->"
+                  f"{row['dp_final']}  wipeouts={row['wipeouts']} "
+                  f"reshapes={row['reshapes']} ttt={row['ttt_s']:.0f}s "
+                  f"work={row['work_units']:.1f}")
+            if cell["arm"] == "reshape":
+                attribution = obs_cli.attribution_table(
+                    load_trace(cell["trace"]))
+
+    rec = {
+        "bench": "elastic",
+        "arch": args.arch,
+        "mesh": f"{args.n_groups}x{args.model_degree}",
+        "r": args.redundancy,
+        "steps": args.steps,
+        "grad_compress": args.grad_compress,
+        "seconds_per_step": args.seconds_per_step,
+        "t_reshape": args.t_reshape,
+        "t_restart": args.t_restart,
+        "arms": rows,
+        "reshape_vs_restart_ttt_x": round(
+            rows["restart"]["ttt_s"] / max(rows["reshape"]["ttt_s"], 1e-9),
+            3),
+        "attribution": attribution,
+    }
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    history = json.loads(out.read_text()) if out.exists() else []
+    history.append(rec)
+    out.write_text(json.dumps(history, indent=1))
+    print(json.dumps(rec, indent=1))
+
+    if args.assert_elastic:
+        rs, rt, mk = rows["reshape"], rows["restart"], rows["mask"]
+        assert rs["wipeouts"] == 0, \
+            f"reshape arm wiped out {rs['wipeouts']}x"
+        assert rs["reshapes"] >= 1, "reshape arm never reshaped"
+        assert rs["dp_final"] < args.n_groups, \
+            "reshape arm should finish degraded"
+        assert rs["recompiles"] <= 2, (
+            f"reshape cost {rs['recompiles']} recompiles (> 1 beyond the "
+            f"new mesh-shape entry)")
+        assert rt["wipeouts"] >= 1, \
+            "restart arm must actually wipe (else the arms diverged)"
+        assert rs["ttt_s"] < rt["ttt_s"], (
+            f"elastic TTT {rs['ttt_s']:.0f}s did not beat restart "
+            f"{rt['ttt_s']:.0f}s")
+        assert mk["ttt_s"] <= rs["ttt_s"], \
+            "masking must stay the cheapest tier"
+        kinds = [r["kind"] for r in (attribution or [])]
+        assert "reshape" in kinds, (
+            f"obs attribution table never saw the reshape: {kinds}")
+        print(f"[elastic] OK: reshape beats restart "
+              f"{rec['reshape_vs_restart_ttt_x']}x on modeled TTT")
+
+
+if __name__ == "__main__":
+    main()

@@ -375,6 +375,8 @@ class AdaptiveScheme(FaultToleranceScheme):
         # live-trainer observation state (see prepare()/recover())
         self._live_failures = 0
         self._live_step0: int | None = None
+        # per-event mask-vs-reshape-vs-restart estimates (live trainer)
+        self.unmaskable_decisions: list[dict] = []
 
     # -------------------------------------------------------------- #
     @property
@@ -486,6 +488,7 @@ class AdaptiveScheme(FaultToleranceScheme):
         self.p = p
         self._live_failures = 0
         self._live_step0 = None
+        self.unmaskable_decisions = []
         if self.initial is None:
             self._mode_name = self._best_mode(p.mtbf)
         self.history = [(0.0, self._mode_name)]
@@ -512,6 +515,34 @@ class AdaptiveScheme(FaultToleranceScheme):
                 self._switches += 1
                 self.history.append((elapsed, target))
         return decision
+
+    def decide_unmaskable(self, *, dp_full: int, dp_new: int,
+                          remaining_steps: int, seconds_per_step: float,
+                          rollback_steps: int = 0,
+                          t_restart: float | None = None,
+                          t_reshape: float | None = None, **_) -> str:
+        """The live third-regime decision: an unmaskable failure set is
+        past every mode's masking power, so the selector weighs the
+        paper's closed-form TTT of degraded-continue at ``dp_new``
+        against restart-and-rollback (:func:`repro.elastic.policy
+        .ttt_estimates`). Outage defaults come from the prepared
+        :class:`DESParams` (``t_restart``; ``t_reconfig`` as the
+        resharding cost). Every estimate is logged in
+        ``unmaskable_decisions`` for the campaign's policy audit."""
+        from repro.elastic.policy import ttt_estimates
+        p = getattr(self, "p", None)
+        if t_restart is None:
+            t_restart = p.t_restart if p is not None else 3600.0
+        if t_reshape is None:
+            t_reshape = p.t_reconfig if p is not None else 1.0
+        est = ttt_estimates(
+            dp_full=dp_full, dp_new=dp_new,
+            remaining_steps=remaining_steps,
+            seconds_per_step=seconds_per_step,
+            rollback_steps=rollback_steps,
+            t_restart=t_restart, t_reshape=t_reshape)
+        self.unmaskable_decisions.append(est)
+        return est["action"]
 
 
 # ------------------------------------------------------------------ #

@@ -23,11 +23,13 @@ of all-reducing them replicated).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["param_specs", "opt_specs", "batch_spec", "cache_specs",
-           "paged_cache_specs"]
+           "paged_cache_specs", "mesh_axis_sizes"]
 
 # output features live on the model axis; input features are FSDP
 _COL_PARALLEL = {"wq", "wk", "wv", "w_in", "w_gate", "w_up",
@@ -59,6 +61,36 @@ def _rule(name: str | None, ndim: int, dp_axes: tuple[str, ...]):
     return (None,) * ndim        # unknown leaf: stay safe, replicate
 
 
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    """``{axis name: size}`` for any mesh — the ``axis_sizes`` argument
+    :func:`param_specs` takes to fit one rule table to that mesh."""
+    return {name: int(size) for name, size in dict(mesh.shape).items()}
+
+
+def _fit(entries, shape, axis_sizes):
+    """Drop spec entries a concrete mesh cannot honor: when every axis
+    of an entry has a known size and the dimension does not divide their
+    product, that dimension falls back to replicated. Entries naming any
+    unknown axis pass through untouched (the caller's mesh may still
+    honor them), so ``axis_sizes=None`` is the identity — one rule table
+    serves the original mesh and every elastic survivor submesh."""
+    if axis_sizes is None:
+        return entries
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        sizes = [axis_sizes.get(a) for a in axes]
+        if all(s is not None for s in sizes) and \
+                int(dim) % math.prod(int(s) for s in sizes):
+            out.append(None)
+        else:
+            out.append(e)
+    return tuple(out)
+
+
 def _leaf_name(path) -> str | None:
     for entry in reversed(path):
         if isinstance(entry, jax.tree_util.DictKey):
@@ -66,12 +98,19 @@ def _leaf_name(path) -> str | None:
     return None
 
 
-def param_specs(p_shapes, cfg, multi_pod: bool):
+def param_specs(p_shapes, cfg, multi_pod: bool, axis_sizes=None):
     """PartitionSpec pytree matching ``model.init``'s parameter tree.
 
     ``p_shapes`` is the ``jax.eval_shape(model.init, ...)`` tree; segment
     leaves carry the leading layer-stack axis, which always stays
     unsharded (it is scanned over).
+
+    ``axis_sizes`` (optional ``{axis: size}``, see
+    :func:`mesh_axis_sizes`) fits the one rule table to a concrete mesh:
+    dimensions a shrunken axis no longer divides fall back to replicated
+    instead of failing partitioning — the elastic tier's submeshes reuse
+    this table verbatim. ``tests/test_elastic.py`` pins that fitting to
+    the original shape is the identity.
     """
     from repro.launch.mesh import dp_axes as _dp
     dp = _dp(multi_pod)
@@ -81,8 +120,9 @@ def param_specs(p_shapes, cfg, multi_pod: bool):
         stacked = any(isinstance(e, jax.tree_util.DictKey)
                       and e.key == "segments" for e in path)
         if stacked:
-            return P(None, *_rule(name, leaf.ndim - 1, dp))
-        return P(*_rule(name, leaf.ndim, dp))
+            return P(None, *_fit(_rule(name, leaf.ndim - 1, dp),
+                                 leaf.shape[1:], axis_sizes))
+        return P(*_fit(_rule(name, leaf.ndim, dp), leaf.shape, axis_sizes))
 
     return jax.tree_util.tree_map_with_path(spec, p_shapes)
 

@@ -1,0 +1,15 @@
+"""repro.elastic — elastic mesh reshaping as the middle recovery tier.
+
+Between SPARe masking (free, weight-table data) and wipe-out restart
+(t_restart + rollback rework) sits degraded-continue: shrink the DP
+degree onto the surviving devices and keep training. See
+:mod:`repro.elastic.executor` for the full mechanics and
+:mod:`repro.elastic.policy` for the closed-form TTT decision.
+"""
+from repro.elastic.executor import ElasticMeshExecutor
+from repro.elastic.policy import ttt_estimates
+from repro.elastic.reshard import (remap_ef_rows, reshard_tree,
+                                   shrink_degree, survivor_submesh)
+
+__all__ = ["ElasticMeshExecutor", "ttt_estimates", "shrink_degree",
+           "survivor_submesh", "reshard_tree", "remap_ef_rows"]

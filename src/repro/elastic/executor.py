@@ -1,0 +1,285 @@
+"""ElasticMeshExecutor — degraded-continue between masking and restart.
+
+The recovery ladder so far had two rungs: SPARe masking (free — weight
+table data, zero recompiles) and wipe-out restart (t_restart + rollback
+rework). This executor adds the middle rung the ROADMAP names after
+ElasWave / Nonuniform-TP: when RECTLR reports an UNMASKABLE failure set,
+shrink the data-parallel degree onto the surviving devices and keep
+training, instead of restarting the world.
+
+Mechanics, in the order a reshape applies them:
+
+1. **decide** — :meth:`_unmaskable_action` evaluates the closed-form TTT
+   comparison (:mod:`repro.elastic.policy`) per event, preferring the
+   scheme's own :meth:`~repro.des.schemes.AdaptiveScheme
+   .decide_unmaskable` when the scheme implements it (the live policy
+   tier of the Chameleon-style selector);
+2. **shrink** — :meth:`reshape` picks the largest divisor of the
+   original DP degree that fits the survivor count (divisors keep the
+   construction-time bucket layout tiling — see
+   :func:`repro.elastic.reshard.shrink_degree`), builds the survivor
+   submesh, re-binds every mesh-shape-dependent piece of the step
+   plumbing (:meth:`~repro.exec.executor.MeshExecutor._bind_mesh`), and
+   starts a fresh :class:`~repro.core.state.SpareState` at the new shape;
+3. **move** — params and Adam moments ``jax.device_put`` onto the
+   shrunken mesh's NamedShardings (bit-transparent; shapes are mesh
+   independent). EF residuals are the exception: ``err1``'s global shape
+   is ``dp * B`` per bucket, so each device row's slice follows its
+   physical row through :func:`~repro.elastic.reshard.remap_ef_rows`;
+4. **account** — the trainer threads a ``reshape`` outcome through
+   :class:`~repro.train.trainer.RecoveryEvent`, the injector's outage
+   clock (``notify_outage(t_reshape, kind="reshape")`` — the arrival
+   model keeps running: surviving hardware stays powered), and the
+   ``launch.obs`` recovery-attribution table.
+
+Executables for other mesh shapes stay warm — the cache is keyed on
+``(data_degree, model_degree, S_A)`` — so a reshape costs exactly one
+new cache entry per (shape, depth) visited, and a later global restart
+(:meth:`_global_restart`) returns to the full mesh with its original
+executables still compiled.
+
+Physical vs logical ids: injectors are constructed against the FULL
+cluster and keep delivering victims in that space. The executor polls
+them with a physical survivor view and translates each event through
+the live ``physical row -> logical group`` map; events landing on
+retired (healthy-but-unused) rows dissolve to no-ops.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.state import SpareState
+from repro.elastic.policy import ttt_estimates
+from repro.elastic.reshard import (remap_ef_rows, shrink_degree,
+                                   survivor_submesh)
+from repro.exec.executor import MeshExecutor
+from repro.models.config import ModelConfig
+from repro.train.trainer import RecoveryEvent, TrainReport
+
+__all__ = ["ElasticMeshExecutor"]
+
+
+class _PhysicalView:
+    """Just enough of the :class:`SpareState` survivor surface for the
+    injector protocols (``poll(state)`` reads ``alive``; plain callables
+    read ``survivors``), expressed in PHYSICAL group space — the full
+    cluster the injector was constructed against, regardless of what
+    submesh training currently runs on."""
+
+    __slots__ = ("alive",)
+
+    def __init__(self, alive: np.ndarray):
+        self.alive = alive
+
+    @property
+    def n(self) -> int:
+        return int(self.alive.size)
+
+    @property
+    def survivors(self) -> np.ndarray:
+        return np.flatnonzero(self.alive)
+
+    @property
+    def failure_count(self) -> int:
+        return int(self.alive.size - self.alive.sum())
+
+
+class ElasticMeshExecutor(MeshExecutor):
+    """:class:`MeshExecutor` with the elastic recovery tier enabled.
+
+    Extra parameter:
+
+    t_reshape: modeled outage seconds one online resharding costs (drain
+        + re-bind + state movement on a real cluster) — what the TTT
+        policy weighs against ``t_restart`` and what the injector clock
+        is charged per reshape.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_groups: int, redundancy: int,
+                 t_reshape: float = 60.0, **kwargs: Any):
+        super().__init__(cfg, n_groups=n_groups, redundancy=redundancy,
+                         **kwargs)
+        if self.data_degree != n_groups:
+            raise ValueError(
+                "elastic reshaping maps one SPARe group per data slice: "
+                f"need data_degree == n_groups, got data={self.data_degree}"
+                f" vs N={n_groups}")
+        self.t_reshape = float(t_reshape)
+        self._full_mesh = self.mesh
+        self._full_n = int(n_groups)
+        self._full_r = int(redundancy)
+        # physical data row backing each logical group (logical -> phys)
+        self._logical_phys = np.arange(n_groups, dtype=np.int64)
+        # inverse: physical row -> logical group, -1 = retired or dead
+        self._group_map = np.arange(n_groups, dtype=np.int64)
+        self._phys_alive = np.ones(n_groups, dtype=bool)
+        # same-shape executables are only reusable on the same devices:
+        # a second reshape to the same degree but a different survivor
+        # set must evict that shape's stale entries
+        self._shape_devices = {
+            (self.data_degree, self.model_degree):
+                tuple(d.id for d in self.mesh.devices.flat)}
+        self._ef_snapshot_rows = self._logical_phys.copy()
+        self.reshape_count = 0
+        self.policy_log: list[dict] = []
+
+    # ------------------------------------------------------------- #
+    # mesh swapping                                                 #
+    # ------------------------------------------------------------- #
+    def _evict_stale_executables(self, mesh: jax.sharding.Mesh) -> None:
+        shape = (mesh.shape["data"], mesh.shape["model"])
+        devs = tuple(d.id for d in mesh.devices.flat)
+        if self._shape_devices.get(shape, devs) != devs:
+            for key in [k for k in self._jitted if (k[0], k[1]) == shape]:
+                del self._jitted[key]
+                self._wire_info.pop(key, None)
+        self._shape_devices[shape] = devs
+
+    def _fit_redundancy(self, n_new: int) -> int:
+        """Largest r <= the original redundancy a cyclic Golomb stacking
+        at degree ``n_new`` supports (r(r-1) distinct non-zero residues
+        must fit mod N); tiny submeshes drop to r=1 (no redundancy)."""
+        for r in range(min(self._full_r, n_new), 1, -1):
+            if r * (r - 1) <= n_new - 1:
+                return r
+        return 1
+
+    def _swap_mesh(self, mesh: jax.sharding.Mesh, n_new: int,
+                   rows: np.ndarray) -> None:
+        """Re-bind onto ``mesh`` (``n_new`` data rows backed by physical
+        rows ``rows``) and move every piece of training state across."""
+        old_rows = self._logical_phys
+        self.state = SpareState(n_new, self._fit_redundancy(n_new))
+        self._evict_stale_executables(mesh)
+        self._bind_mesh(mesh)
+        self.params = jax.device_put(self.params, self._pshard)
+        self.opt_state = jax.device_put(self.opt_state, self._oshard)
+        if self._ef_state is not None:
+            ef = jax.tree.map(np.asarray, self._ef_state)
+            ef = remap_ef_rows(ef, self._layout.bucket_sizes,
+                               old_rows, rows)
+            self._ef_state = jax.device_put(ef, self._ef_shard)
+        self._logical_phys = np.asarray(rows, dtype=np.int64)
+        self._group_map = np.full(self._full_n, -1, dtype=np.int64)
+        self._group_map[self._logical_phys] = np.arange(n_new)
+
+    def reshape(self, victims) -> dict:
+        """Shrink past ``victims`` (logical group ids of the CURRENT
+        state) onto a survivor submesh and return the move summary.
+        Usable directly (lint, tests) — the trainer loop reaches it
+        through :meth:`_apply_reshape`."""
+        victims = {int(v) for v in victims}
+        for v in victims:
+            if 0 <= v < self.state.n:
+                self._phys_alive[int(self._logical_phys[v])] = False
+        surv = [w for w in range(self.state.n)
+                if self.state.alive[w] and w not in victims]
+        n_new = shrink_degree(self._full_n, len(surv))
+        if n_new < 1:
+            raise ValueError(
+                f"no survivor submesh can continue past {sorted(victims)}")
+        rows = sorted(int(self._logical_phys[w]) for w in surv)[:n_new]
+        mesh = survivor_submesh(self._full_mesh, rows)
+        dp_before = self.state.n
+        self._swap_mesh(mesh, n_new, np.asarray(rows, dtype=np.int64))
+        self.reshape_count += 1
+        return {"dp_before": dp_before, "dp": n_new, "rows": rows}
+
+    def restore_full_mesh(self) -> None:
+        """Back to the original ``(data, model)`` mesh at full DP —
+        the global-restart path (every group comes back)."""
+        self._swap_mesh(self._full_mesh, self._full_n,
+                        np.arange(self._full_n, dtype=np.int64))
+        self._phys_alive[:] = True
+
+    # ------------------------------------------------------------- #
+    # trainer hooks                                                 #
+    # ------------------------------------------------------------- #
+    def _poll_events(self, injector) -> list[list[int]]:
+        # injectors live in physical space: poll them with the physical
+        # survivor view, not the (possibly shrunken) logical state
+        if injector is None:
+            return []
+        view = _PhysicalView(self._phys_alive)
+        poll = getattr(injector, "poll", None)
+        if poll is not None:
+            return [ev.victims for ev in poll(view)]
+        failed = injector(view)
+        return [list(failed)] if failed else []
+
+    def _event_victims(self, victims: list[int]) -> list[int]:
+        out = []
+        for p in victims:
+            p = int(p)
+            if not 0 <= p < self._full_n:
+                continue
+            self._phys_alive[p] = False
+            logical = int(self._group_map[p])
+            if logical >= 0:
+                out.append(logical)
+        return out
+
+    def _unmaskable_action(self, victims: list[int], injector) -> str:
+        dead = set(int(v) for v in victims)
+        surv = [w for w in range(self.state.n)
+                if self.state.alive[w] and w not in dead]
+        n_new = shrink_degree(self._full_n, len(surv))
+        if n_new < 1:
+            return "restart"
+        kw = dict(
+            dp_full=self._full_n, dp_new=n_new,
+            remaining_steps=max(self.total_steps - self.step, 1),
+            seconds_per_step=float(getattr(injector, "seconds_per_step",
+                                           0.0) or 0.0),
+            rollback_steps=max(self.step - self._snapshot_step(), 0),
+            t_restart=self._t_restart, t_reshape=self.t_reshape)
+        decide = getattr(self.scheme, "decide_unmaskable", None)
+        if decide is not None:
+            action = decide(**kw)
+            self.policy_log.append(dict(kw, action=action))
+            return action
+        est = ttt_estimates(**kw)
+        self.policy_log.append(est)
+        return est["action"]
+
+    def _apply_reshape(self, event: RecoveryEvent, victims: list[int],
+                       injector, report: TrainReport) -> None:
+        info = self.reshape(victims)
+        event.reshape = True
+        event.dp_before = info["dp_before"]
+        event.dp_after = info["dp"]
+        event.s_a_after = self.state.s_a
+        event.reshape_seconds = self.t_reshape
+        notify = getattr(injector, "notify_outage", None)
+        if notify is not None:
+            # resharding outage elapses, but the arrival model keeps
+            # running — surviving hardware stays powered throughout
+            notify(self.t_reshape, kind="reshape")
+
+    def _global_restart(self) -> None:
+        if self.state.n != self._full_n:
+            self.restore_full_mesh()
+        else:
+            self.state.reset()
+        self._phys_alive[:] = True
+
+    # ------------------------------------------------------------- #
+    # snapshot / rollback (EF rows follow their physical devices)   #
+    # ------------------------------------------------------------- #
+    def _snapshot_now(self) -> None:
+        super()._snapshot_now()
+        self._ef_snapshot_rows = self._logical_phys.copy()
+
+    def _rollback(self):
+        if self._ef_snapshot is not None and \
+                list(self._ef_snapshot_rows) != list(self._logical_phys):
+            # the snapshot was taken at another mesh shape: re-slot its
+            # err1 rows for the mesh the rollback restores onto
+            self._ef_snapshot = remap_ef_rows(
+                self._ef_snapshot, self._layout.bucket_sizes,
+                self._ef_snapshot_rows, self._logical_phys)
+            self._ef_snapshot_rows = self._logical_phys.copy()
+        return super()._rollback()

@@ -154,10 +154,15 @@ class MeshExecutor(SpareTrainer):
                 f"N*per_type_batch % data == 0")
         # bucketed flat sync: the manual program's per-step gradient
         # reduction is O(n_buckets) collectives (fp32 psum, or the int8
-        # EF wire protocol), never one per parameter leaf
+        # EF wire protocol), never one per parameter leaf. The layout is
+        # built ONCE, padded to the construction-time DP degree, and
+        # kept across elastic reshapes: any shrunken data axis that
+        # divides the original degree still tiles every bucket, so EF
+        # residuals move between meshes bit-transparently (repro.elastic)
         self._grad_sync = None
         self._ef_state = None
         self._ef_snapshot = None
+        self._layout = None
         if sync == "shard_map":
             acc = jnp.dtype(cfg.grad_accum_dtype)
             gtree = jax.tree.map(
@@ -166,19 +171,50 @@ class MeshExecutor(SpareTrainer):
                 gtree, max_bucket_elems=max(int(bucket_mb * (1 << 20) // 4),
                                             self.data_degree),
                 pad_to=self.data_degree)
-            if grad_compress == "int8_ef":
+        self._bind_mesh(mesh)
+        self.params = jax.device_put(self.params, self._pshard)
+        self.opt_state = jax.device_put(self.opt_state, self._oshard)
+        if grad_compress:
+            self._ef_state = jax.device_put(self._grad_sync.init_state(),
+                                            self._ef_shard)
+        # per-host feeding plumbing: the one-slot double buffer (the
+        # builder thread materializes the next step's rows while the
+        # dispatched step executes)
+        self._feed_pool = ThreadPoolExecutor(max_workers=1)
+        self.total_recompiles = 0   # cache misses, run-driven or not
+        # live wire accounting: launch/hlo.py's byte audit of the
+        # compiled step, memoized per (mesh shape, S_A) cache key
+        self._wire_info: dict[tuple, dict] = {}
+
+    def _bind_mesh(self, mesh: jax.sharding.Mesh) -> None:
+        """(Re)build every mesh-shape-dependent piece of the step
+        plumbing: gradient sync, step fn, param/opt/EF/batch shardings.
+        Called at construction and by the elastic reshaper
+        (:class:`repro.elastic.ElasticMeshExecutor`) after it swaps the
+        mesh for a survivor submesh — the executable cache itself is
+        keyed on the mesh shape (:meth:`_cache_key`), so executables for
+        other shapes stay warm."""
+        self.mesh = mesh
+        self.data_degree = mesh.shape["data"]
+        self.model_degree = mesh.shape["model"]
+        if self.sync == "shard_map":
+            if self.grad_compress == "int8_ef":
                 self._grad_sync = CompressedBucketSync(
                     self._layout, self.data_degree, "data")
+                if self.telemetry is not None and self.telemetry.deep:
+                    # deep mode: in-jit per-bucket markers (changes the
+                    # compiled program)
+                    self._grad_sync.tel = self.telemetry
             else:
                 self._grad_sync = BucketedAllReduce(self._layout, "data")
         # the sharded spelling of the step the parent already built: the
         # same pure function, with the named-axis gradient sync when the
         # program is manual
         self._step_fn = make_train_step(
-            self.model, base_lr=base_lr, total_steps=total_steps,
-            axis_name="data" if sync == "shard_map" else None,
+            self.model, base_lr=self._base_lr, total_steps=self.total_steps,
+            axis_name="data" if self.sync == "shard_map" else None,
             grad_sync=self._grad_sync)
-        if sync == "gspmd":
+        if self.sync == "gspmd":
             p_specs = executor_param_specs(self.params, self.model_degree)
         else:   # manual program: per-device replicas, pure DP
             p_specs = jax.tree.map(lambda _: P(), self.params)
@@ -188,31 +224,15 @@ class MeshExecutor(SpareTrainer):
             step=NamedSharding(mesh, P()),
             mu=jax.tree.map(lambda s: s, self._pshard),
             nu=jax.tree.map(lambda s: s, self._pshard))
-        self.params = jax.device_put(self.params, self._pshard)
-        self.opt_state = jax.device_put(self.opt_state, self._oshard)
-        if grad_compress:
+        if self.grad_compress:
             self._ef_shard = jax.tree.map(
                 lambda s: NamedSharding(mesh, s),
                 self._grad_sync.state_specs())
-            self._ef_state = jax.device_put(self._grad_sync.init_state(),
-                                            self._ef_shard)
-        # per-host feeding plumbing: batch shardings hoisted out of the
-        # per-step path, plus the one-slot double buffer (the builder
-        # thread materializes the next step's rows while the dispatched
-        # step executes)
+        # batch shardings hoisted out of the per-step path
         self._bshard = {k: NamedSharding(mesh, s)
                         for k, s in self._batch_specs().items()}
-        self._feed_pool = ThreadPoolExecutor(max_workers=1)
         self._prefetch: tuple[tuple, Future] | None = None
         self._mesh_grad_fn = None
-        self.total_recompiles = 0   # cache misses, run-driven or not
-        # live wire accounting: launch/hlo.py's byte audit of the
-        # compiled step, memoized per S_A (see _observe_sync)
-        self._wire_info: dict[int, dict] = {}
-        if self.telemetry is not None and self.telemetry.deep \
-                and isinstance(self._grad_sync, CompressedBucketSync):
-            # deep mode: in-jit per-bucket markers (changes the program)
-            self._grad_sync.tel = self.telemetry
 
     # ------------------------------------------------------------- #
     # sharded step plumbing                                         #
@@ -242,6 +262,14 @@ class MeshExecutor(SpareTrainer):
                               out_specs=tuple(out_specs))
         return fn   # gspmd: sharding comes from jit in/out shardings
 
+    def _cache_key(self, s_a: int) -> tuple[int, int, int]:
+        """Executable-cache key: ``(data_degree, model_degree, s_a)``.
+        Keying on the mesh shape (not just ``S_A``) lets the elastic
+        recovery tier swap in a survivor submesh and back without ever
+        invalidating warm executables — a reshape costs exactly one new
+        cache entry per (shape, depth) it visits."""
+        return (self.data_degree, self.model_degree, s_a)
+
     def _compiled(self, s_a: int, report: TrainReport | None = None):
         # Donation contract (analyzer-enforced): params, opt_state, and —
         # under int8_ef — the EF residuals are donated, and every donated
@@ -249,11 +277,12 @@ class MeshExecutor(SpareTrainer):
         # module. ``python -m repro.launch.lint`` replays this jit site
         # via ``compiled_step_text`` and fails CI on any unaliased
         # donated buffer (repro.analysis donation-audit pass).
-        if s_a not in self._jitted:
+        key = self._cache_key(s_a)
+        if key not in self._jitted:
             out_shardings = ((self._pshard, self._oshard, None)
                              if self.sync == "gspmd" else None)
             donate = (0, 1, 3) if self.grad_compress else (0, 1)
-            self._jitted[s_a] = jax.jit(self._wrap_step(self._step_fn),
+            self._jitted[key] = jax.jit(self._wrap_step(self._step_fn),
                                         out_shardings=out_shardings,
                                         donate_argnums=donate)
             # total_recompiles is the order-independent count (HLO
@@ -264,7 +293,7 @@ class MeshExecutor(SpareTrainer):
                 report.recompiles += 1
             if self.telemetry is not None:
                 self.telemetry.counter("train.recompiles").inc()
-        return self._jitted[s_a]
+        return self._jitted[key]
 
     # ------------------------------------------------------------- #
     # per-host input feeding                                        #
@@ -291,12 +320,16 @@ class MeshExecutor(SpareTrainer):
                         shape[1] if sl.stop is None else sl.stop))
         return sorted(ranges)
 
-    def _host_slabs(self, schedule, s_a: int, step: int) -> dict:
+    def _host_slabs(self, schedule, s_a: int, step: int,
+                    ranges: list[tuple[int, int]]) -> dict:
         """Materialize only this host's example rows: {(lo, hi) -> np
-        batch dict}. Runs on the builder thread for the prefetched step."""
+        batch dict}. Runs on the builder thread for the prefetched step;
+        ``ranges`` is snapshotted by the caller (``_feed_ranges`` reads
+        the mesh-shape-dependent batch shardings, which an elastic
+        reshape rebinds)."""
         return {(lo, hi): spare_batch_rows(self.pipeline, schedule, s_a,
                                            step, lo, hi)
-                for lo, hi in self._feed_ranges(s_a)}
+                for lo, hi in ranges}
 
     def _place_slabs(self, s_a: int, slabs: dict) -> dict:
         """Assemble the sharded global batch without ever materializing
@@ -347,7 +380,8 @@ class MeshExecutor(SpareTrainer):
                 # asked for a different step) — the prefetched rows are
                 # stale; drop them and build synchronously
             if slabs is None:
-                slabs = self._host_slabs(schedule, state.s_a, step)
+                slabs = self._host_slabs(schedule, state.s_a, step,
+                                         self._feed_ranges(state.s_a))
             out = self._place_slabs(state.s_a, slabs)
         if tel is not None:
             tel.counter("feed.prefetch_hits" if hit
@@ -359,7 +393,8 @@ class MeshExecutor(SpareTrainer):
         the builder thread while the current step executes on device."""
         key, schedule = self._batch_key(self.state, self.step + 1)
         self._prefetch = (key, self._feed_pool.submit(
-            self._host_slabs, schedule, self.state.s_a, self.step + 1))
+            self._host_slabs, schedule, self.state.s_a, self.step + 1,
+            self._feed_ranges(self.state.s_a)))
 
     def _dispatch(self, report: TrainReport):
         batch = self._device_batch()
@@ -383,8 +418,8 @@ class MeshExecutor(SpareTrainer):
         this runs, so the one-time lowering cost per depth is the only
         overhead — steady-state steps just bump a counter). Deep mode
         adds the int8-EF residual norms, which synchronize the device."""
-        s_a = self.state.s_a
-        info = self._wire_info.get(s_a)
+        key = self._cache_key(self.state.s_a)
+        info = self._wire_info.get(key)
         if info is None:
             from repro.launch.hlo import collective_report
             # compiled_step_text builds its own batch — keep the live
@@ -394,7 +429,7 @@ class MeshExecutor(SpareTrainer):
                 text = self.compiled_step_text()
             finally:
                 self._prefetch = saved
-            info = self._wire_info[s_a] = collective_report(text)
+            info = self._wire_info[key] = collective_report(text)
         tel.gauge("sync.wire_bytes_per_step").set(info["total_bytes"])
         tel.gauge("sync.collectives_per_step").set(
             int(sum(info["counts"].values())))
@@ -515,6 +550,16 @@ class MeshExecutor(SpareTrainer):
 
     @property
     def compiled_depths(self) -> list[int]:
-        """S_A depths with a live compiled executable (cache keys) — a
-        failure re-weight at constant S_A must not grow this."""
+        """S_A depths with a live compiled executable for the CURRENT
+        mesh shape — a failure re-weight at constant S_A must not grow
+        this. Executables compiled for other mesh shapes (elastic
+        reshapes) live under their own keys; see :attr:`cache_keys`."""
+        shape = (self.data_degree, self.model_degree)
+        return sorted(s_a for (d, m, s_a) in self._jitted
+                      if (d, m) == shape)
+
+    @property
+    def cache_keys(self) -> list[tuple[int, int, int]]:
+        """Every live executable-cache key, ``(data, model, s_a)`` —
+        the full picture across mesh shapes the run has visited."""
         return sorted(self._jitted)

@@ -14,7 +14,9 @@ deterministic report:
   512 devices (via :func:`repro.launch.dryrun.lower_cell` — the exact
   jit sites CI compiles), and one certification child at 8 devices
   sweeps the live :class:`~repro.exec.executor.MeshExecutor` variants
-  over the FULL RECTLR-recoverable survivor space, plus the
+  over the FULL RECTLR-recoverable survivor space, the reshaped-mesh
+  executables of :class:`~repro.elastic.ElasticMeshExecutor` after a
+  degraded-continue shrink, plus the
   :class:`~repro.train.trainer.SpareTrainer` jit site and every
   :class:`~repro.serve.engine.ExecutableCache` program of a warmed
   :class:`~repro.serve.engine.ServeEngine`.
@@ -136,6 +138,33 @@ def certify_executors() -> Report:
                     survivor_sets_certified=certified)
         report.note("donation-audit",
                     donated_leaves_audited=ex.donated_leaves())
+
+    # the elastic tier's reshaped-mesh executables: shrink past an
+    # unmaskable adjacent pair (DP 8 -> 4 on the survivor submesh) and
+    # certify the degraded-shape programs with the same passes, plus
+    # the full RECTLR survivor sweep at the shrunken shape
+    from repro.elastic import ElasticMeshExecutor
+
+    for compress in (None, "int8_ef"):
+        tag = "executor:elastic-reshaped" + (f"+{compress}" if compress
+                                             else "")
+        elx = ElasticMeshExecutor(cfg, sync="shard_map",
+                                  grad_compress=compress, n_groups=8,
+                                  redundancy=2, model_degree=1,
+                                  seq=32, per_type_batch=2, total_steps=50)
+        elx.reshape([0, 1])
+        text = elx.compiled_step_text()
+        report.extend(donation_audit(text, elx.donated_leaves(), tag))
+        report.extend(hot_path_purity(text, tag))
+        report.extend(wire_dtype_policy(text, tag))
+        report.extend(ef_state_policy(elx, tag))
+        found, certified = schedule_determinism_executor(elx, tag)
+        report.extend(found)
+        report.note("collective-schedule-determinism",
+                    survivor_sets_certified=certified)
+        report.note("donation-audit",
+                    donated_leaves_audited=elx.donated_leaves())
+        elx.close()
 
     # the emulation trainer's jit site (donate_argnums=(0, 1))
     from repro.data.pipeline import spare_batch

@@ -82,24 +82,32 @@ def attribution_table(view: TraceView) -> list[dict]:
       median step duration (``rollback_depth x median(step)``);
     * ``restart_s`` — the modeled restart outage the injector accounted
       on its failure clock (``restart_seconds`` span arg), i.e. what a
-      real cluster would additionally pay to come back.
+      real cluster would additionally pay to come back;
+    * ``reshape_s`` — the modeled resharding outage of an elastic
+      degraded-continue (``reshape_seconds`` span arg): the event kept
+      training at a reduced DP degree instead of restarting.
     """
     step_us = _median_step_us(view)
     rows = []
     for s in view.named("recover"):
         args = s.args or {}
         wipe = bool(args.get("wipeout"))
+        reshape = bool(args.get("reshape"))
         depth = int(args.get("rollback_depth", 0))
+        kind = "reshape" if reshape else ("restart" if wipe else "mask")
         rows.append({
             "t_s": s.ts / 1e6,
             "step": args.get("step"),
-            "kind": "restart" if wipe else "mask",
+            "kind": kind,
             "victims": args.get("victims", []),
             "handling_s": s.dur / 1e6,
-            "masking_s": 0.0 if wipe else s.dur / 1e6,
+            "masking_s": s.dur / 1e6 if kind == "mask" else 0.0,
             "rollback_depth": depth,
             "rollback_s": depth * step_us / 1e6,
             "restart_s": float(args.get("restart_seconds", 0.0)),
+            "reshape_s": float(args.get("reshape_seconds", 0.0)),
+            "dp": (f"{args.get('dp_before', '?')}->"
+                   f"{args.get('dp_after', '?')}" if reshape else ""),
             "s_a": f"{args.get('s_a_before', '?')}->"
                    f"{args.get('s_a_after', '?')}",
         })
@@ -122,6 +130,7 @@ def analyze(view: TraceView) -> dict:
             "masking_s": sum(r["masking_s"] for r in att),
             "rollback_s": sum(r["rollback_s"] for r in att),
             "restart_s": sum(r["restart_s"] for r in att),
+            "reshape_s": sum(r["reshape_s"] for r in att),
         },
     }
 
@@ -150,19 +159,22 @@ def _print_report(rep: dict, view: TraceView, timeline: int) -> None:
     if att:
         print(f"  {'t_s':>8} {'step':>5} {'kind':>7} {'victims':<14} "
               f"{'masking_s':>9} {'rollback_s':>10} {'restart_s':>9} "
-              f"{'S_A':>6}")
+              f"{'reshape_s':>9} {'DP':>6} {'S_A':>6}")
         for r in att:
             vict = ",".join(str(v) for v in r["victims"])
             print(f"  {r['t_s']:>8.3f} {str(r['step']):>5} "
                   f"{r['kind']:>7} {vict:<14} "
                   f"{r['masking_s']:>9.3f} {r['rollback_s']:>10.3f} "
-                  f"{r['restart_s']:>9.1f} {r['s_a']:>6}")
+                  f"{r['restart_s']:>9.1f} {r['reshape_s']:>9.1f} "
+                  f"{r.get('dp', ''):>6} {r['s_a']:>6}")
         lost = rep["lost"]
         print(f"  {'TOTAL':>22} {'':<14} {lost['masking_s']:>9.3f} "
-              f"{lost['rollback_s']:>10.3f} {lost['restart_s']:>9.1f}")
+              f"{lost['rollback_s']:>10.3f} {lost['restart_s']:>9.1f} "
+              f"{lost['reshape_s']:>9.1f}")
         print("  (masking = recovery handling that kept training; "
               "rollback = wiped steps x median step; restart = modeled "
-              "outage on the injector clock)")
+              "outage on the injector clock; reshape = modeled elastic "
+              "resharding outage, training continued degraded)")
 
     if timeline:
         print(f"\ntimeline (main track, first {timeline} spans):")

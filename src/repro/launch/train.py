@@ -143,6 +143,16 @@ def main() -> None:
                          "sync (int8 payload + per-bucket scales over "
                          "the wire, EF residuals as device-local state; "
                          "requires --sync shard_map)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="with --mesh: enable the elastic recovery tier "
+                         "(repro.elastic.ElasticMeshExecutor) — an "
+                         "unmaskable failure set shrinks the DP degree "
+                         "and continues degraded when the TTT policy "
+                         "favors it over restart")
+    ap.add_argument("--t-reshape", type=float, default=60.0,
+                    help="--elastic only: modeled outage seconds per "
+                         "online resharding (weighed against the "
+                         "t_restart outage by the TTT policy)")
     ap.add_argument("--scheme", default="spare",
                     help="fault-tolerance scheme (repro.des registry: "
                          "spare | replication | ckpt_only | adaptive)")
@@ -204,12 +214,20 @@ def main() -> None:
                   total_steps=args.steps, telemetry=tel,
                   scheme=get_scheme(args.scheme, **scheme_kwargs))
     if args.mesh:
-        from repro.exec import MeshExecutor
         compress = None if args.grad_compress == "none" else \
             args.grad_compress
-        trainer = MeshExecutor(cfg, model_degree=args.model_degree,
-                               sync=args.sync, grad_compress=compress,
-                               **common)
+        mesh_kw = dict(model_degree=args.model_degree, sync=args.sync,
+                       grad_compress=compress, **common)
+        if args.elastic:
+            from repro.elastic import ElasticMeshExecutor
+            trainer = ElasticMeshExecutor(cfg, t_reshape=args.t_reshape,
+                                          **mesh_kw)
+        else:
+            from repro.exec import MeshExecutor
+            trainer = MeshExecutor(cfg, **mesh_kw)
+    elif args.elastic:
+        ap.error("--elastic needs --mesh (the elastic tier reshapes a "
+                 "real device mesh)")
     else:
         trainer = SpareTrainer(cfg, **common)
     if args.failure_model is not None:
@@ -230,8 +248,13 @@ def main() -> None:
           f"({dt / max(rep.steps_done, 1):.2f}s/step)")
     print(f"[train] loss {rep.losses[0]:.4f} -> {rep.losses[-1]:.4f} | "
           f"failures={rep.failures} wipeouts={rep.wipeouts} "
-          f"reorders={rep.reorders} patches={rep.patches} "
-          f"S_A={trainer.state.s_a} ckpts={rep.ckpt_saves}")
+          f"reshapes={rep.reshapes} reorders={rep.reorders} "
+          f"patches={rep.patches} S_A={trainer.state.s_a} "
+          f"ckpts={rep.ckpt_saves}")
+    if rep.reshapes:
+        print(f"[train] elastic: DP degree now {trainer.state.n} "
+              f"(full {args.n_groups}); policy log: "
+              f"{getattr(trainer, 'policy_log', [])}")
     if rep.events:
         print(f"[train] recovery events={len(rep.events)} "
               f"multi_group={rep.multi_group_events} "

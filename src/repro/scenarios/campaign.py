@@ -37,6 +37,7 @@ __all__ = [
     "cell_seed", "run_cell", "run_campaign", "parallel_map",
     "aggregate", "ranking_by_regime", "save_artifacts",
     "TRAINER_REGIME_MODELS", "trainer_regime_cells", "run_trainer_cell",
+    "elastic_regime_cells", "run_elastic_cell",
 ]
 
 #: SimResult fields copied into each cell's result row (all deterministic)
@@ -410,6 +411,142 @@ def run_trainer_cell(cell: dict) -> dict:
         "loss_last": rep.losses[-1] if rep.losses else None,
         "elapsed_s": elapsed,
     }
+
+
+# ------------------------------------------------------------------ #
+# elastic cells (mask vs reshape vs restart on the live mesh)        #
+# ------------------------------------------------------------------ #
+def elastic_regime_cells(arch: str = "qwen2.5-3b", n: int = 8, r: int = 2,
+                         steps: int = 24, fail_step: int = 8,
+                         seq: int = 32, per_type_batch: int = 2,
+                         model_degree: int = 1,
+                         seconds_per_step: float = 64.0,
+                         t_reshape: float = 60.0,
+                         t_restart: float = 3600.0,
+                         snapshot_every: int = 10,
+                         grad_compress: str | None = "int8_ef",
+                         trace_dir: str | None = None) -> list[dict]:
+    """The third-regime campaign: the SAME deterministic failure clock
+    hits three recovery tiers on the live emulated mesh.
+
+    * ``mask`` — a single-group kill at ``fail_step``: RECTLR masks it,
+      training continues at full DP (the free tier);
+    * ``reshape`` — an adjacent-pair kill (unmaskable at r=2, every
+      adjacent pair is a wiping set) on the elastic executor: the TTT
+      policy continues degraded on a survivor submesh;
+    * ``restart`` — the identical unmaskable kill on the plain executor:
+      wipe-out rollback + modeled cluster restart, the only pre-elastic
+      option.
+
+    All arms run the adaptive scheme (pinned to SPARe masking) so the
+    reshape decision flows through
+    :meth:`~repro.des.schemes.AdaptiveScheme.decide_unmaskable`.
+    """
+    arms = [
+        ("mask", [0], True),
+        ("reshape", [0, 1], True),
+        ("restart", [0, 1], False),
+    ]
+    cells = []
+    for arm, victims, elastic in arms:
+        cell = {
+            "kind": "elastic", "arm": arm, "arch": arch, "n": n, "r": r,
+            "steps": steps, "fail_step": fail_step, "victims": victims,
+            "elastic": elastic, "seq": seq,
+            "per_type_batch": per_type_batch,
+            "model_degree": model_degree,
+            "seconds_per_step": seconds_per_step,
+            "t_reshape": t_reshape, "t_restart": t_restart,
+            "snapshot_every": snapshot_every,
+            "grad_compress": grad_compress,
+        }
+        if trace_dir is not None:
+            cell["trace"] = str(Path(trace_dir) / f"{arm}.trace.json")
+        cells.append(cell)
+    return cells
+
+
+def run_elastic_cell(cell: dict) -> dict:
+    """Worker entry point for elastic cells: one deterministic failure
+    burst through one recovery tier, with the work-normalized TTT the
+    arms are compared on.
+
+    ``work_units`` counts committed FULL-batch step equivalents: a step
+    at DP degree d contributes ``d / n`` (degraded steps cover fewer
+    examples), wiped-out steps contribute nothing. ``ttt_s`` is the
+    modeled time to ``steps`` work units: the injector clock (outages
+    included) plus the remaining deficit at the end-state rate.
+    """
+    from ..configs import smoke_config
+    from ..des import get_scheme
+    from ..elastic import ElasticMeshExecutor
+    from ..exec import MeshExecutor
+    from ..train.injection import ScriptedInjector
+
+    cfg = smoke_config(cell.get("arch", "qwen2.5-3b")).scaled(grad_accum=1)
+    tel = None
+    if cell.get("trace"):
+        from ..obs import Telemetry
+        tel = Telemetry()
+    n, steps = cell["n"], cell["steps"]
+    sps = cell["seconds_per_step"]
+    kw = dict(n_groups=n, redundancy=cell["r"],
+              model_degree=cell.get("model_degree", 1),
+              seq=cell.get("seq", 32),
+              per_type_batch=cell.get("per_type_batch", 2),
+              total_steps=steps, t_restart=cell.get("t_restart", 3600.0),
+              grad_compress=cell.get("grad_compress"),
+              scheme=get_scheme("adaptive", r=cell["r"], initial="spare"),
+              telemetry=tel)
+    if cell["elastic"]:
+        ex = ElasticMeshExecutor(cfg, t_reshape=cell["t_reshape"], **kw)
+    else:
+        ex = MeshExecutor(cfg, **kw)
+    inj = ScriptedInjector({cell["fail_step"]: list(cell["victims"])},
+                           seconds_per_step=sps)
+    t0 = time.perf_counter()
+    rep = ex.run(steps, injector=inj,
+                 snapshot_every=cell.get("snapshot_every", 10))
+    elapsed = time.perf_counter() - t0
+
+    # committed work: degraded steps pro-rated, wiped steps discounted
+    work = float(rep.steps_done)
+    for e in rep.events:
+        if e.reshape:
+            work -= (steps - e.step) * (1.0 - e.dp_after / n)
+        if e.wipeout:
+            work -= e.rollback_depth
+    dp_end = int(ex.state.n)
+    deficit = max(float(steps) - work, 0.0)
+    ttt = inj.clock + deficit * sps * (n / dp_end)
+
+    if tel is not None:
+        tel.dump_trace(cell["trace"])
+        tel.metrics.dump(str(cell["trace"]) + ".metrics.json")
+    row = {
+        "key": cell_key(cell),
+        "arm": cell["arm"],
+        "n": n, "r": cell["r"],
+        "dp_final": dp_end,
+        "steps_done": rep.steps_done,
+        "failures": rep.failures,
+        "wipeouts": rep.wipeouts,
+        "reshapes": rep.reshapes,
+        "recompiles": rep.recompiles,
+        "compiled_entries": len(ex.cache_keys),
+        "rollback_steps": rep.rollback_steps,
+        "outage_s": inj.outage_seconds,
+        "elapsed_model_s": inj.clock,
+        "work_units": work,
+        "ttt_s": ttt,
+        "policy": (ex.policy_log[-1] if getattr(ex, "policy_log", None)
+                   else None),
+        "loss_first": rep.losses[0] if rep.losses else None,
+        "loss_last": rep.losses[-1] if rep.losses else None,
+        "elapsed_s": elapsed,
+    }
+    ex.close()
+    return row
 
 
 # ------------------------------------------------------------------ #

@@ -37,7 +37,7 @@ from repro.des.params import DESParams
 from repro.scenarios.models import bind_model, drain_event_window
 from repro.scenarios.topology import ClusterTopology
 
-__all__ = ["StepEvent", "ScenarioInjector"]
+__all__ = ["StepEvent", "ScenarioInjector", "ScriptedInjector"]
 
 
 class StepEvent:
@@ -100,6 +100,7 @@ class ScenarioInjector:
         self._next_fail = self.model.next_arrival(0.0, self.n, self.n)
         self.events_delivered = 0
         self.victims_delivered = 0
+        self.outage_seconds = 0.0        # cumulative downtime accounted
         # SpareTrainer.run auto-attaches its Telemetry here (if any) so
         # injection counters land in the same metrics snapshot
         self.telemetry = None
@@ -132,10 +133,67 @@ class ScenarioInjector:
         return [w for ev in self.poll(state) for w in ev.victims]
 
     # ------------------------------------------------------------- #
+    def notify_outage(self, seconds: float | None = None,
+                      kind: str = "restart") -> None:
+        """Account ``seconds`` of downtime on the model clock.
+
+        ``kind="restart"`` (the wipe-out path) additionally re-arms the
+        arrival stream at full capacity — trace replay drops events that
+        hit the downed system, renewal models re-draw. Other kinds
+        (``"reshape"``) only advance the clock: the arrival process keeps
+        running because the surviving hardware stays powered through the
+        reconfiguration."""
+        if seconds is None:
+            seconds = self.p.t_restart
+        self.clock += float(seconds)
+        self.outage_seconds += float(seconds)
+        if kind == "restart":
+            self._next_fail = self.model.reset(self.clock, self.n, self.n)
+
     def notify_wipeout(self) -> None:
-        """The trainer wiped out and restarts: account the restart
-        outage on the model clock and re-arm the arrival stream at full
-        capacity (trace replay drops events that hit the downed system;
-        renewal models re-draw)."""
-        self.clock += self.p.t_restart
-        self._next_fail = self.model.reset(self.clock, self.n, self.n)
+        """Legacy alias for ``notify_outage(kind="restart")``."""
+        self.notify_outage(self.p.t_restart, kind="restart")
+
+
+class ScriptedInjector:
+    """Deterministic injector: a fixed ``{poll index: victims}`` script.
+
+    Used by the elastic campaign arms and CI smoke runs, where the
+    benchmark needs the *same* beyond-recoverable burst at the same step
+    in every arm. Satisfies both injector protocols (``poll`` and plain
+    call) and the ``notify_outage`` accounting interface.
+    """
+
+    def __init__(self, schedule: dict[int, list[int]], *,
+                 seconds_per_step: float = 1.0):
+        self.schedule = {int(k): list(v) for k, v in schedule.items()}
+        self.seconds_per_step = float(seconds_per_step)
+        self.clock = 0.0
+        self.step = 0
+        self.outage_seconds = 0.0
+        self.events_delivered = 0
+        self.victims_delivered = 0
+        self.telemetry = None
+
+    def poll(self, state: SpareState) -> list[StepEvent]:
+        victims = self.schedule.get(self.step, [])
+        self.clock += self.seconds_per_step
+        out = ([StepEvent(self.step, self.clock, victims)]
+               if victims else [])
+        self.step += 1
+        self.events_delivered += len(out)
+        self.victims_delivered += sum(len(e.victims) for e in out)
+        return out
+
+    def __call__(self, state: SpareState) -> list[int]:
+        return [w for ev in self.poll(state) for w in ev.victims]
+
+    def notify_outage(self, seconds: float | None = None,
+                      kind: str = "restart") -> None:
+        if seconds is None:
+            seconds = 0.0
+        self.clock += float(seconds)
+        self.outage_seconds += float(seconds)
+
+    def notify_wipeout(self) -> None:
+        self.notify_outage(0.0, kind="restart")

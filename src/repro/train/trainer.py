@@ -102,12 +102,18 @@ class RecoveryEvent:
     moves: int = 0
     rollback_depth: int = 0          # steps rolled back (wipe-out only)
     grad_check_err: float | None = None   # §3.1 relative error, if verified
+    # -- elastic recovery tier (repro.elastic): an unmaskable failure --
+    # -- set absorbed by shrinking the DP degree instead of restarting --
+    reshape: bool = False            # degraded-continue took the event
+    dp_before: int = 0               # DP degree before the reshape
+    dp_after: int = 0                # DP degree training continues at
     # -- durations (the obs CLI's attribution table keys off these) -- #
     wall_seconds: float = 0.0        # host wall-clock handling the event
     step_seconds: float = 0.0        # step-clock cost: controller time for
     #                                  a mask, rollback_depth x sec/step
     #                                  for a wipe-out
     restart_seconds: float = 0.0     # modeled outage (t_restart, wipe-outs)
+    reshape_seconds: float = 0.0     # modeled resharding outage (reshapes)
 
     @property
     def multi_group(self) -> bool:
@@ -120,6 +126,7 @@ class TrainReport:
     losses: list = field(default_factory=list)
     failures: int = 0
     wipeouts: int = 0
+    reshapes: int = 0
     reorders: int = 0
     patches: int = 0
     recompiles: int = 0
@@ -170,6 +177,8 @@ class SpareTrainer:
         self.params = self.model.init(key)
         self.opt_state = adamw_init(self.params,
                                     moment_dtype=cfg.moment_dtype)
+        self._base_lr = float(base_lr)
+        self.total_steps = int(total_steps)
         self._step_fn = make_train_step(self.model, base_lr=base_lr,
                                         total_steps=total_steps)
         self._jitted: dict[int, Any] = {}       # S_A -> compiled step
@@ -218,6 +227,13 @@ class SpareTrainer:
         assert self._snapshot is not None, "no snapshot taken yet"
         return self._snapshot
 
+    def _snapshot_step(self) -> int:
+        """Step of the current rollback point WITHOUT restoring it — the
+        rollback-depth estimate recovery policies cost restarts with."""
+        snap = self.ckpt._snapshot if self.ckpt is not None \
+            else self._snapshot
+        return snap[0] if snap is not None else self.step
+
     def _poll_events(self, injector) -> list[list[int]]:
         """One victim batch per failure event this step. A scenario
         bridge (``poll``) yields per-event blast radii; a plain callable
@@ -229,6 +245,35 @@ class SpareTrainer:
             return [ev.victims for ev in poll(self.state)]
         failed = injector(self.state)
         return [list(failed)] if failed else []
+
+    # ---------------------------------------------------------------- #
+    # recovery-tier hooks (repro.elastic overrides these)              #
+    # ---------------------------------------------------------------- #
+    def _event_victims(self, victims: list[int]) -> list[int]:
+        """Map one event's victim ids into the trainer's group space.
+        Identity here; the elastic executor polls on PHYSICAL group ids
+        and translates through its survivor map, so events that land
+        after a reshape still resolve against the live mesh."""
+        return victims
+
+    def _unmaskable_action(self, victims: list[int], injector) -> str:
+        """Decide what an unmaskable failure set costs: ``"restart"``
+        (wipe-out rollback, the only option here) or ``"reshape"``
+        (continue degraded on a survivor submesh — the elastic tier)."""
+        return "restart"
+
+    def _apply_reshape(self, event: RecoveryEvent, victims: list[int],
+                       injector, report: TrainReport) -> None:
+        """Shrink onto the surviving devices and continue. Only the
+        elastic executor implements this; the base trainer never routes
+        here because :meth:`_unmaskable_action` always restarts."""
+        raise NotImplementedError(
+            "elastic reshaping needs repro.elastic.ElasticMeshExecutor")
+
+    def _global_restart(self) -> None:
+        """Wipe-out: every group comes back at full capacity (the
+        modeled cluster restart) before the rollback restores params."""
+        self.state.reset()
 
     # ---------------------------------------------------------------- #
     def run(self, steps: int,
@@ -250,7 +295,8 @@ class SpareTrainer:
                 # the pluggable scheme decides wipe-out vs. mask/reorder.
                 # Every event's full victim batch (a rack/pod blast
                 # radius at once) reaches recover() in ONE call.
-                victims = [int(w) for w in victims if self.state.alive[w]]
+                victims = self._event_victims([int(w) for w in victims])
+                victims = [w for w in victims if self.state.alive[w]]
                 if not victims:
                     continue
                 report.failures += len(victims)
@@ -267,19 +313,34 @@ class SpareTrainer:
                     outcome = self.scheme.recover(self.state, victims,
                                                   step=self.step)
                     report.controller_seconds += outcome.controller_seconds
+                    action = "mask"
+                    if outcome.wipeout:
+                        # the elastic tier may absorb an unmaskable set
+                        # by shrinking the mesh instead of restarting
+                        action = self._unmaskable_action(victims, injector)
                     event = RecoveryEvent(
                         step=self.step, victims=victims,
-                        wipeout=outcome.wipeout,
+                        wipeout=outcome.wipeout and action != "reshape",
                         reordered=outcome.reordered,
                         patch_count=outcome.patch_count,
                         s_a_before=outcome.s_a_before,
                         s_a_after=outcome.s_a_after, moves=outcome.moves)
-                    ev_args.update(wipeout=outcome.wipeout,
+                    ev_args.update(wipeout=event.wipeout,
                                    s_a_before=outcome.s_a_before,
                                    s_a_after=outcome.s_a_after)
-                    if outcome.wipeout:
+                    if action == "reshape":
+                        report.reshapes += 1
+                        self._apply_reshape(event, victims, injector,
+                                            report)
+                        event.step_seconds = outcome.controller_seconds
+                        ev_args.update(
+                            reshape=True, dp_before=event.dp_before,
+                            dp_after=event.dp_after,
+                            s_a_after=event.s_a_after,
+                            reshape_seconds=event.reshape_seconds)
+                    elif outcome.wipeout:
                         report.wipeouts += 1
-                        self.state.reset()
+                        self._global_restart()
                         rolled_from = self.step
                         self.step, (self.params, self.opt_state) = \
                             self._rollback()
@@ -292,20 +353,29 @@ class SpareTrainer:
                         ev_args.update(
                             rollback_depth=event.rollback_depth,
                             restart_seconds=event.restart_seconds)
-                        notify = getattr(injector, "notify_wipeout", None)
+                        notify = getattr(injector, "notify_outage", None)
                         if notify is not None:
-                            notify()     # outage elapsed; re-arm the model
+                            # outage elapsed; re-arm the arrival model
+                            notify(self._t_restart, kind="restart")
+                        else:
+                            legacy = getattr(injector, "notify_wipeout",
+                                             None)
+                            if legacy is not None:
+                                legacy()
                         wiped = True
                     else:
                         # masked: the step-clock cost is the controller
                         event.step_seconds = outcome.controller_seconds
                 event.wall_seconds = time.perf_counter() - t_ev
                 if tel is not None:
-                    if outcome.wipeout:
+                    if event.wipeout:
                         tel.counter("train.wipeouts").inc()
                         tel.counter("train.rollback_steps").inc(
                             event.rollback_depth)
-                    tel.gauge("train.s_a").set(outcome.s_a_after)
+                    if event.reshape:
+                        tel.counter("train.reshapes").inc()
+                        tel.gauge("train.dp_degree").set(event.dp_after)
+                    tel.gauge("train.s_a").set(event.s_a_after)
                 if wiped:
                     report.events.append(event)
                     break   # later events hit a system already down

@@ -1,0 +1,425 @@
+"""repro.elastic: degraded-continue between SPARe masking and restart.
+
+Covers the ISSUE-9 acceptance points. Host-side pieces (the TTT policy,
+divisor shrinking, EF row remapping, the sharding rule fitter, and the
+injector outage clock) run everywhere; the mesh pieces are
+``spmd``-marked (>= 8 devices, see tests/conftest.py) and prove:
+
+* resharding is bit-transparent — params/Adam moments/EF residuals
+  round-trip the full -> survivor -> full mesh byte-for-byte;
+* a reshaped run continues bit-exactly as a from-scratch run at the
+  shrunken shape (same seed, same schedule, same losses);
+* an unmaskable burst continues degraded with ZERO wipe-outs and
+  exactly one extra executable-cache entry (the new mesh shape);
+* a later wipe-out restores the full mesh, and the adaptive scheme's
+  ``decide_unmaskable`` is the live policy tier.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config("qwen2.5-3b").scaled(grad_accum=1)
+
+
+def _elastic(cfg, **kw):
+    from repro.elastic import ElasticMeshExecutor
+    kw.setdefault("n_groups", 8)
+    kw.setdefault("redundancy", 2)
+    kw.setdefault("model_degree", 1)
+    kw.setdefault("seq", 32)
+    kw.setdefault("per_type_batch", 2)
+    kw.setdefault("total_steps", 24)
+    kw.setdefault("t_reshape", 60.0)
+    return ElasticMeshExecutor(cfg, **kw)
+
+
+# ------------------------------------------------------------------ #
+# host-side: TTT policy                                              #
+# ------------------------------------------------------------------ #
+def test_ttt_policy_prefers_reshape_when_restart_dearer():
+    from repro.elastic import ttt_estimates
+    est = ttt_estimates(dp_full=8, dp_new=4, remaining_steps=16,
+                        seconds_per_step=64.0, rollback_steps=8,
+                        t_restart=3600.0, t_reshape=60.0)
+    # degraded finish: 60 + 16*64*(8/4) = 2108; restart: 3600 + 24*64
+    assert est["reshape_ttt"] == pytest.approx(2108.0)
+    assert est["restart_ttt"] == pytest.approx(5136.0)
+    assert est["action"] == "reshape"
+
+
+def test_ttt_policy_prefers_restart_near_no_survivors_or_cheap_restart():
+    from repro.elastic import ttt_estimates
+    # no viable submesh -> reshape is infinitely expensive
+    est = ttt_estimates(dp_full=8, dp_new=0, remaining_steps=16,
+                        seconds_per_step=64.0, t_restart=3600.0,
+                        t_reshape=60.0)
+    assert est["reshape_ttt"] == float("inf")
+    assert est["action"] == "restart"
+    # cheap restart + tiny submesh + long remaining run -> restart wins
+    est = ttt_estimates(dp_full=8, dp_new=2, remaining_steps=1000,
+                        seconds_per_step=64.0, rollback_steps=0,
+                        t_restart=60.0, t_reshape=60.0)
+    assert est["restart_ttt"] < est["reshape_ttt"]
+    assert est["action"] == "restart"
+
+
+def test_ttt_policy_tie_goes_to_reshape():
+    from repro.elastic import ttt_estimates
+    # identical outage + identical rework: prefer not losing progress
+    est = ttt_estimates(dp_full=4, dp_new=2, remaining_steps=10,
+                        seconds_per_step=10.0, rollback_steps=10,
+                        t_restart=100.0, t_reshape=100.0)
+    assert est["reshape_ttt"] == est["restart_ttt"]
+    assert est["action"] == "reshape"
+
+
+def test_shrink_degree_picks_largest_divisor():
+    from repro.elastic import shrink_degree
+    assert shrink_degree(8, 7) == 4
+    assert shrink_degree(8, 6) == 4
+    assert shrink_degree(8, 4) == 4
+    assert shrink_degree(8, 3) == 2
+    assert shrink_degree(8, 1) == 1
+    assert shrink_degree(8, 0) == 0
+    assert shrink_degree(6, 5) == 3
+
+
+def test_adaptive_scheme_decide_unmaskable_records_estimates():
+    from repro.des import get_scheme
+    scheme = get_scheme("adaptive", r=2, initial="spare")
+    action = scheme.decide_unmaskable(
+        dp_full=8, dp_new=4, remaining_steps=16, seconds_per_step=64.0,
+        rollback_steps=8, t_restart=3600.0, t_reshape=60.0)
+    assert action == "reshape"
+    assert scheme.unmaskable_decisions[-1]["action"] == "reshape"
+    assert scheme.unmaskable_decisions[-1]["reshape_ttt"] == \
+        pytest.approx(2108.0)
+
+
+# ------------------------------------------------------------------ #
+# host-side: EF row remapping                                        #
+# ------------------------------------------------------------------ #
+def test_remap_ef_rows_follows_physical_rows():
+    from repro.elastic import remap_ef_rows
+    B = 6
+    old_rows = np.arange(8)
+    err1 = np.arange(8 * B, dtype=np.float32)       # row i = [i*B, ...)
+    ef = {"err1": [err1], "err2": [np.ones(B, np.float32)]}
+    out = remap_ef_rows(ef, [B], old_rows, np.array([2, 3, 4, 5]))
+    got = np.asarray(out["err1"][0]).reshape(4, B)
+    for j, p in enumerate([2, 3, 4, 5]):
+        np.testing.assert_array_equal(got[j], err1.reshape(8, B)[p])
+    np.testing.assert_array_equal(np.asarray(out["err2"][0]),
+                                  np.ones(B, np.float32))
+    # growing back: surviving rows return to their slots, fresh rows zero
+    back = remap_ef_rows(out, [B], np.array([2, 3, 4, 5]), old_rows)
+    full = np.asarray(back["err1"][0]).reshape(8, B)
+    for p in [2, 3, 4, 5]:
+        np.testing.assert_array_equal(full[p], err1.reshape(8, B)[p])
+    for p in [0, 1, 6, 7]:
+        assert not full[p].any()
+
+
+# ------------------------------------------------------------------ #
+# host-side: sharding rule fitter                                    #
+# ------------------------------------------------------------------ #
+def test_sharding_fit_identity_on_original_shape(cfg):
+    """The one rule table serves every mesh: fitting it to the original
+    axis sizes changes nothing, and ``axis_sizes=None`` is the identity
+    by construction."""
+    import jax
+
+    from repro.dist.sharding import param_specs
+    from repro.models import build_model
+
+    p_shapes = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+    base = param_specs(p_shapes, cfg, multi_pod=False)
+    fitted = param_specs(p_shapes, cfg, multi_pod=False,
+                         axis_sizes={"data": 4, "model": 2})
+    assert jax.tree.map(tuple, base) == jax.tree.map(tuple, fitted)
+    assert param_specs(p_shapes, cfg, multi_pod=False, axis_sizes=None) \
+        == base
+
+
+def test_sharding_fit_drops_nondividing_entries(cfg):
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import param_specs
+    from repro.models import build_model
+
+    p_shapes = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+    # a data degree no dimension divides: every "data" entry must fall
+    # back to replicated instead of failing partitioning
+    fitted = param_specs(p_shapes, cfg, multi_pod=False,
+                         axis_sizes={"data": 7, "model": 1})
+    for spec in jax.tree.leaves(fitted,
+                                is_leaf=lambda x: isinstance(x, P)):
+        for entry in spec:
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            assert "data" not in axes
+    # unknown axes pass through untouched
+    loose = param_specs(p_shapes, cfg, multi_pod=False,
+                        axis_sizes={"model": 2})
+    assert jax.tree.map(tuple, loose) == \
+        jax.tree.map(tuple, param_specs(p_shapes, cfg, multi_pod=False))
+
+
+def test_mesh_axis_sizes_reads_any_mesh():
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.dist.sharding import mesh_axis_sizes
+
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    assert mesh_axis_sizes(Mesh(devs, ("data", "model"))) == \
+        {"data": 1, "model": 1}
+
+
+# ------------------------------------------------------------------ #
+# host-side: injector outage clock                                   #
+# ------------------------------------------------------------------ #
+def test_notify_outage_accounting_and_rearming():
+    from repro.des.params import DESParams
+    from repro.scenarios import ClusterTopology
+    from repro.train.injection import ScenarioInjector
+
+    topo = ClusterTopology(n_groups=8, hosts_per_group=2, hosts_per_rack=4)
+    spec = {"kind": "poisson", "mtbf": 1e9}
+    inj = ScenarioInjector(spec, topo, n_groups=8, seconds_per_step=100.0,
+                           seed=0, params=DESParams(t_restart=3600.0))
+    armed = inj._next_fail
+    inj.notify_outage(60.0, kind="reshape")
+    assert inj.clock == pytest.approx(60.0)
+    assert inj.outage_seconds == pytest.approx(60.0)
+    assert inj._next_fail == armed, \
+        "a reshape outage must NOT re-arm the arrival model"
+    inj.notify_outage(kind="restart")          # seconds default: t_restart
+    assert inj.clock == pytest.approx(3660.0)
+    assert inj.outage_seconds == pytest.approx(3660.0)
+    assert inj._next_fail != armed, "a restart re-arms every group"
+
+
+def test_notify_wipeout_is_the_restart_alias():
+    from repro.des.params import DESParams
+    from repro.scenarios import ClusterTopology
+    from repro.train.injection import ScenarioInjector
+
+    topo = ClusterTopology(n_groups=8, hosts_per_group=2, hosts_per_rack=4)
+    a = ScenarioInjector({"kind": "poisson", "mtbf": 1e9}, topo, n_groups=8,
+                         seconds_per_step=100.0, seed=0,
+                         params=DESParams(t_restart=1234.0))
+    b = ScenarioInjector({"kind": "poisson", "mtbf": 1e9}, topo, n_groups=8,
+                         seconds_per_step=100.0, seed=0,
+                         params=DESParams(t_restart=1234.0))
+    a.notify_wipeout()
+    b.notify_outage(1234.0, kind="restart")
+    assert a.clock == b.clock == pytest.approx(1234.0)
+    assert a.outage_seconds == b.outage_seconds
+
+
+def test_scripted_injector_delivers_once_and_tracks_outage():
+    from repro.core import SpareState
+    from repro.train.injection import ScriptedInjector
+
+    inj = ScriptedInjector({2: [0, 1]}, seconds_per_step=64.0)
+    st = SpareState(8, 2)
+    victims = []
+    for _ in range(5):
+        victims += [ev.victims for ev in inj.poll(st)]
+    assert victims == [[0, 1]]
+    assert inj.clock == pytest.approx(5 * 64.0)
+    inj.notify_outage(60.0, kind="reshape")
+    assert inj.clock == pytest.approx(5 * 64.0 + 60.0)
+    assert inj.outage_seconds == pytest.approx(60.0)
+    assert inj.events_delivered == 1
+    assert inj.victims_delivered == 2
+
+
+# ------------------------------------------------------------------ #
+# spmd: bit-transparent resharding                                   #
+# ------------------------------------------------------------------ #
+@pytest.mark.spmd
+def test_resharding_round_trips_bit_identical(cfg):
+    """full -> survivor submesh -> full: params, Adam moments, and the
+    surviving EF residual rows come back byte-for-byte."""
+    import jax
+
+    ex = _elastic(cfg, grad_compress="int8_ef")
+    ex.run(3)                                   # make state nonzero
+    host = lambda t: jax.tree.map(np.asarray, t)        # noqa: E731
+    p0, o0, e0 = host(ex.params), host(ex.opt_state), host(ex._ef_state)
+
+    ex.reshape([0, 1])                          # DP 8 -> 4 on rows 2..5
+    assert ex.state.n == 4
+    assert [int(r) for r in ex._logical_phys] == [2, 3, 4, 5]
+    for a, b in zip(jax.tree.leaves(host(ex.params)), jax.tree.leaves(p0)):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(jax.tree.leaves(host(ex.opt_state)),
+                    jax.tree.leaves(o0)):
+        np.testing.assert_array_equal(a, b)
+    # err1 rows followed their physical devices
+    for b, size in enumerate(ex._layout.bucket_sizes):
+        got = np.asarray(ex._ef_state["err1"][b]).reshape(4, size)
+        ref = np.asarray(e0["err1"][b]).reshape(8, size)
+        for j, p in enumerate([2, 3, 4, 5]):
+            np.testing.assert_array_equal(got[j], ref[p])
+
+    ex.restore_full_mesh()
+    assert ex.state.n == 8
+    for a, b in zip(jax.tree.leaves(host(ex.params)), jax.tree.leaves(p0)):
+        np.testing.assert_array_equal(a, b)
+    for b, size in enumerate(ex._layout.bucket_sizes):
+        got = np.asarray(ex._ef_state["err1"][b]).reshape(8, size)
+        ref = np.asarray(e0["err1"][b]).reshape(8, size)
+        for p in [2, 3, 4, 5]:
+            np.testing.assert_array_equal(got[p], ref[p])
+    # shardings land where the full-mesh plumbing declares them
+    assert ex.params["embed"].sharding == ex._pshard["embed"]
+    ex.close()
+
+
+@pytest.mark.spmd
+def test_post_reshape_run_matches_from_scratch_shrunken_run(cfg):
+    """A reshaped executor IS a fresh executor at the shrunken shape:
+    same seed + same schedule => bit-identical losses, params, and EF
+    residuals (spare_batch content is a pure function of (type, step))."""
+    import jax
+
+    from repro.exec import MeshExecutor
+
+    elx = _elastic(cfg, grad_compress="int8_ef")
+    elx.reshape([0, 1])
+    rep_e = elx.run(3)
+
+    ref = MeshExecutor(cfg, n_groups=4, redundancy=2, model_degree=1,
+                       seq=32, per_type_batch=2, total_steps=24,
+                       grad_compress="int8_ef")
+    rep_r = ref.run(3)
+
+    assert [float(x) for x in rep_e.losses] == \
+        [float(x) for x in rep_r.losses]
+    for a, b in zip(jax.tree.leaves(jax.tree.map(np.asarray, elx.params)),
+                    jax.tree.leaves(jax.tree.map(np.asarray, ref.params))):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(jax.tree.leaves(jax.tree.map(np.asarray,
+                                                 elx._ef_state)),
+                    jax.tree.leaves(jax.tree.map(np.asarray,
+                                                 ref._ef_state))):
+        np.testing.assert_array_equal(a, b)
+    elx.close()
+    ref.close()
+
+
+# ------------------------------------------------------------------ #
+# spmd: the live degraded-continue loop                              #
+# ------------------------------------------------------------------ #
+@pytest.mark.spmd
+def test_unmaskable_burst_continues_degraded_zero_wipeouts(cfg):
+    """The tentpole scenario: an adjacent pair at n=8,r=2 (beyond
+    RECTLR) reshapes to DP 4 and finishes — zero wipe-outs, zero
+    rollback, and exactly one extra cache entry (the new mesh shape)."""
+    from repro.train.injection import ScriptedInjector
+
+    ex = _elastic(cfg, grad_compress="int8_ef")
+    inj = ScriptedInjector({8: [0, 1]}, seconds_per_step=64.0)
+    rep = ex.run(24, injector=inj, snapshot_every=10)
+
+    assert rep.steps_done == 24
+    assert rep.wipeouts == 0
+    assert rep.reshapes == 1
+    assert rep.rollback_steps == 0
+    assert ex.state.n == 4
+    assert all(np.isfinite(rep.losses))
+    ev = [e for e in rep.events if e.reshape]
+    assert len(ev) == 1
+    assert (ev[0].dp_before, ev[0].dp_after) == (8, 4)
+    assert ev[0].reshape_seconds == pytest.approx(60.0)
+    assert not ev[0].wipeout, "a reshape is not a wipe-out"
+    # one executable per (shape, depth) visited: (8,1)@S_A=1 + (4,1)@S_A=1
+    assert sorted(k[:2] for k in ex.cache_keys) == [(4, 1), (8, 1)]
+    assert rep.recompiles == 2
+    # the outage clock took one reshape, no restart
+    assert inj.outage_seconds == pytest.approx(60.0)
+    # the policy tier chose reshape on live TTT numbers
+    assert ex.policy_log[-1]["action"] == "reshape"
+    assert ex.policy_log[-1]["reshape_ttt"] < \
+        ex.policy_log[-1]["restart_ttt"]
+    ex.close()
+
+
+@pytest.mark.spmd
+def test_cascading_failures_reshape_again(cfg):
+    """Survivor submeshes are first-class: a second unmaskable burst on
+    the shrunken mesh shrinks again (8 -> 4 -> 2) instead of wiping."""
+    from repro.train.injection import ScriptedInjector
+
+    ex = _elastic(cfg, grad_compress="int8_ef")
+    inj = ScriptedInjector({4: [0, 1], 8: [2, 3]}, seconds_per_step=64.0)
+    rep = ex.run(12, injector=inj, snapshot_every=4)
+    assert rep.wipeouts == 0
+    assert rep.reshapes == 2
+    assert ex.state.n == 2
+    assert ex.state.r == 1, "n=2 has no cyclic Golomb ruler at r=2"
+    assert all(np.isfinite(rep.losses))
+    ex.close()
+
+
+@pytest.mark.spmd
+def test_restart_after_reshape_restores_full_mesh(cfg):
+    """When the policy picks restart while degraded, the global restart
+    returns to the ORIGINAL mesh with its executables still cached."""
+    ex = _elastic(cfg, grad_compress="int8_ef", t_reshape=60.0)
+    ex.run(4, snapshot_every=4)
+    keys_before = set(ex.cache_keys)
+    ex.reshape([0, 1])
+    ex.run(2)
+    ex._global_restart()
+    assert ex.state.n == 8
+    assert ex._phys_alive.all()
+    assert keys_before <= set(ex.cache_keys)
+    rep = ex.run(2)
+    assert all(np.isfinite(rep.losses))
+    ex.close()
+
+
+@pytest.mark.spmd
+def test_adaptive_scheme_is_the_live_policy_tier(cfg):
+    """With the adaptive scheme, reshape decisions flow through
+    ``decide_unmaskable`` — the scheme's own decision log records the
+    same TTT estimate the executor acted on."""
+    from repro.des import get_scheme
+    from repro.train.injection import ScriptedInjector
+
+    scheme = get_scheme("adaptive", r=2, initial="spare")
+    ex = _elastic(cfg, scheme=scheme)
+    inj = ScriptedInjector({4: [0, 1]}, seconds_per_step=64.0)
+    rep = ex.run(8, injector=inj, snapshot_every=4)
+    assert rep.reshapes == 1
+    assert rep.wipeouts == 0
+    assert scheme.unmaskable_decisions, \
+        "the decision must route through the scheme"
+    assert scheme.unmaskable_decisions[-1]["action"] == "reshape"
+    assert ex.policy_log[-1]["action"] == "reshape"
+    ex.close()
+
+
+@pytest.mark.spmd
+def test_masking_still_first_resort(cfg):
+    """A maskable failure never reaches the elastic tier: no reshape,
+    no policy consult, no recompile at constant S_A beyond the depth."""
+    from repro.train.injection import ScriptedInjector
+
+    ex = _elastic(cfg)
+    inj = ScriptedInjector({3: [0]}, seconds_per_step=64.0)
+    rep = ex.run(8, injector=inj)
+    assert rep.failures == 1
+    assert rep.reshapes == 0
+    assert rep.wipeouts == 0
+    assert ex.policy_log == []
+    assert ex.state.n == 8
+    ex.close()
