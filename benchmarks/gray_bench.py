@@ -1,0 +1,164 @@
+"""Gray-failure benchmark: tolerate vs proactive SPARe demotion TTT.
+
+Runs the gray campaign (``repro.scenarios.campaign.gray_regime_cells``)
+on the live emulated mesh: the SAME scripted fail-slow episode (one DP
+group degraded 3x for a fixed poll window, nobody dies) through two
+mitigation arms —
+
+* ``tolerate`` — no detector: the synchronous barrier stretches every
+  step to the straggler's pace for the whole episode;
+* ``demote`` — the online straggler detector flags the group within its
+  dwell window, the adaptive scheme's ``decide_degraded`` picks SPARe
+  demotion (a pure weight-table edit, both stacking depths pre-warmed so
+  zero run-attributed recompiles), and the group is re-admitted
+  bit-identically once the episode heals.
+
+The demote arm is traced; the record carries the ``launch.obs``
+recovery-attribution rows so ``demote`` / ``readmit`` kinds show up in
+the same table that attributes masks, restarts, and reshapes.
+
+Appends one record per invocation to ``BENCH_gray.json`` at the repo
+root. ``--assert-min-speedup`` is the CI gate: the detector must flag
+within the dwell window, demotion must restore at least
+``--min-steprate`` (default 0.9) of the healthy step rate with zero
+run-attributed recompiles, re-admission must be bit-identical to a
+never-demoted weight table, and the demote arm's modeled TTT must be
+strictly below tolerate's.
+
+Usage:
+  python benchmarks/gray_bench.py [--steps 32] [--n-groups 8]
+      [--slow-step 4] [--heal-step 16] [--slow-factor 3.0]
+      [--seconds-per-step 64] [--min-steprate 0.9]
+      [--assert-min-speedup] [--arch qwen2.5-3b]
+"""
+import argparse
+import json
+import os
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def force_device_count(n: int) -> None:
+    """Append the host-platform fan-out to XLA_FLAGS (preserving any
+    flags already set) — must run before the first jax import."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    existing = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in existing:
+        os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--n-groups", type=int, default=8)
+    ap.add_argument("--redundancy", type=int, default=2)
+    ap.add_argument("--model-degree", type=int, default=1)
+    ap.add_argument("--slow-group", type=int, default=0)
+    ap.add_argument("--slow-factor", type=float, default=3.0)
+    ap.add_argument("--slow-step", type=int, default=4)
+    ap.add_argument("--heal-step", type=int, default=16)
+    ap.add_argument("--seconds-per-step", type=float, default=64.0)
+    ap.add_argument("--t-restart", type=float, default=3600.0)
+    ap.add_argument("--min-steprate", type=float, default=0.9,
+                    help="fraction of the healthy step rate demotion "
+                         "must restore while the episode persists")
+    ap.add_argument("--assert-min-speedup", action="store_true",
+                    help="fail unless the detector flags in time, "
+                         "demotion restores the step rate with zero "
+                         "recompiles, re-admission is bit-identical, and "
+                         "demote beats tolerate on modeled TTT")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_gray.json"))
+    args = ap.parse_args()
+
+    force_device_count(args.n_groups * args.model_degree)
+
+    from repro.launch import obs as obs_cli
+    from repro.obs import load_trace
+    from repro.scenarios.campaign import gray_regime_cells, run_gray_cell
+
+    with tempfile.TemporaryDirectory(prefix="gray-bench-") as td:
+        cells = gray_regime_cells(
+            arch=args.arch, n=args.n_groups, r=args.redundancy,
+            steps=args.steps, slow_group=args.slow_group,
+            slow_factor=args.slow_factor, slow_step=args.slow_step,
+            heal_step=args.heal_step,
+            model_degree=args.model_degree,
+            seconds_per_step=args.seconds_per_step,
+            t_restart=args.t_restart, trace_dir=td)
+        rows = {}
+        attribution = None
+        for cell in cells:
+            row = run_gray_cell(cell)
+            rows[row["arm"]] = row
+            print(f"[gray] {row['arm']:>8}: steps={row['steps_done']} "
+                  f"demotes={row['demotes']} readmits={row['readmits']} "
+                  f"flag@{row['flag_step']} ttt={row['ttt_s']:.0f}s "
+                  f"recompiles={row['recompiles']}")
+            if cell["arm"] == "demote":
+                attribution = obs_cli.attribution_table(
+                    load_trace(cell["trace"]))
+
+    dm, tol = rows["demote"], rows["tolerate"]
+    rec = {
+        "bench": "gray",
+        "arch": args.arch,
+        "mesh": f"{args.n_groups}x{args.model_degree}",
+        "r": args.redundancy,
+        "steps": args.steps,
+        "slow": {"group": args.slow_group, "factor": args.slow_factor,
+                 "window": [args.slow_step, args.heal_step]},
+        "seconds_per_step": args.seconds_per_step,
+        "arms": rows,
+        "demote_vs_tolerate_ttt_x": round(
+            tol["ttt_s"] / max(dm["ttt_s"], 1e-9), 3),
+        "attribution": attribution,
+    }
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    history = json.loads(out.read_text()) if out.exists() else []
+    history.append(rec)
+    out.write_text(json.dumps(history, indent=1))
+    print(json.dumps(rec, indent=1))
+
+    if args.assert_min_speedup:
+        # detector latency: warmup + flag dwell after the episode onset
+        # (the scripted window starts at --slow-step)
+        from repro.health import StragglerDetector
+        det = StragglerDetector(args.n_groups)
+        dwell_budget = args.slow_step + det.warmup + det.min_dwell + 1
+        assert dm["demotes"] >= 1 and dm["demote_step"] is not None, \
+            "demote arm never demoted"
+        assert dm["flag_step"] is not None \
+            and dm["flag_step"] <= dwell_budget, (
+            f"detector flagged at {dm['flag_step']}, after the dwell "
+            f"budget (step {dwell_budget})")
+        assert dm["wipeouts"] == 0 and tol["wipeouts"] == 0, \
+            "gray arms must not wipe out (nobody dies)"
+        rate = (dm["healthy_window_s"]
+                / max(dm["post_demote_window_max"] or float("inf"), 1e-9))
+        assert rate >= args.min_steprate, (
+            f"demotion restored only {rate:.2f}x of the healthy step "
+            f"rate (< {args.min_steprate})")
+        assert dm["recompiles"] == 0, (
+            f"demote round trip cost {dm['recompiles']} run-attributed "
+            f"recompiles (pre-warm should freeze this at zero)")
+        assert dm["readmits"] >= 1 and dm["readmit_identical"], \
+            "re-admitted weight table must match a never-demoted run"
+        assert dm["ttt_s"] < tol["ttt_s"], (
+            f"demote TTT {dm['ttt_s']:.0f}s did not beat tolerate "
+            f"{tol['ttt_s']:.0f}s")
+        kinds = [r["kind"] for r in (attribution or [])]
+        assert "demote" in kinds and "readmit" in kinds, (
+            f"obs attribution table missed the demote/readmit round "
+            f"trip: {kinds}")
+        print(f"[gray] OK: demote beats tolerate "
+              f"{rec['demote_vs_tolerate_ttt_x']}x on modeled TTT, "
+              f"step rate restored to {rate:.2f}x healthy")
+
+
+if __name__ == "__main__":
+    main()

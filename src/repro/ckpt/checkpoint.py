@@ -191,22 +191,41 @@ def restore_checkpoint(directory: str | Path, tree_like: Any,
 
 
 class CheckpointManager:
-    """Async two-tier manager with the Eq.-1 optimal interval."""
+    """Async two-tier manager with the Eq.-1 optimal interval.
+
+    Background-save failures are never silent: the worker retries once
+    (after ``retry_backoff`` seconds — transient storage hiccups are the
+    common case), and a save that still fails is captured and re-raised
+    from the next :meth:`wait` or :meth:`maybe_save` call on the
+    training thread. ``saves`` counts only checkpoints that durably
+    committed, and a failed save rewinds ``_last_save_wall`` so the
+    interval clock re-arms immediately.
+
+    ``clock`` stamps manifest provenance (wall time); ``monotonic``
+    drives the save-interval decision — inject a fake for deterministic
+    :meth:`due` tests, exactly like ``clock=`` for byte-stable saves.
+    """
 
     def __init__(self, directory: str | Path, *, n_groups: int,
                  redundancy: int, mtbf: float, t_save: float,
-                 t_restart: float, keep: int = 3, clock=time.time):
+                 t_restart: float, keep: int = 3, clock=time.time,
+                 monotonic=time.monotonic, retry_backoff: float = 0.1):
         self.directory = Path(directory)
         self.clock = clock              # manifest provenance timestamps
+        self.monotonic = monotonic      # save-interval clock (injectable)
+        self.retry_backoff = float(retry_backoff)
         if self.directory.exists():
             sweep_stale_tmp(self.directory)  # crash leftovers from prior runs
         self.keep = keep
         t_f = mu(n_groups, redundancy) * mtbf
         self.interval = tc_star(t_f, t_save, t_restart)
-        self._last_save_wall = time.monotonic()
+        self._last_save_wall = self.monotonic()
         self._thread: threading.Thread | None = None
+        self._outcome: dict[str, Any] | None = None
+        self._save_error: BaseException | None = None
         self._snapshot: tuple[int, Any] | None = None
-        self.saves = 0
+        self.saves = 0                  # committed checkpoints only
+        self.save_failures = 0          # saves that failed even the retry
 
     # ---------------- in-memory tier ---------------- #
     def snapshot(self, step: int, tree: Any) -> None:
@@ -221,33 +240,77 @@ class CheckpointManager:
 
     # ---------------- disk tier ---------------- #
     def due(self, now: float | None = None) -> bool:
-        now = time.monotonic() if now is None else now
+        self._fold()    # a finished failed save rewinds the clock here
+        now = self.monotonic() if now is None else now
         return (now - self._last_save_wall) >= self.interval
 
     def maybe_save(self, step: int, tree: Any, *, block: bool = False,
                    force: bool = False) -> bool:
         if not force and not self.due():
             return False
-        self.wait()                     # one in-flight save at a time
+        self.wait()                     # one in-flight save at a time;
+        #                                 re-raises a prior failed save
         host_tree = jax.tree.map(np.asarray, tree)   # device -> host copy
+        # advance the interval clock at dispatch so due() cannot refire
+        # while this save is in flight; a failure rewinds it (in _fold)
+        prev_wall, self._last_save_wall = self._last_save_wall, \
+            self.monotonic()
+        # one-shot result channel: the worker writes ONLY this local
+        # dict; all manager bookkeeping (`saves`, `save_failures`, the
+        # interval rewind) folds in on the training thread after join
+        outcome: dict[str, Any] = {"prev_wall": prev_wall}
 
         def work():
-            save_checkpoint(self.directory, step, host_tree,
-                            clock=self.clock)
-            self._gc()
+            try:
+                try:
+                    save_checkpoint(self.directory, step, host_tree,
+                                    clock=self.clock)
+                except Exception:
+                    time.sleep(self.retry_backoff)   # transient hiccup?
+                    save_checkpoint(self.directory, step, host_tree,
+                                    clock=self.clock)
+                self._gc()
+            except BaseException as e:   # noqa: BLE001 - surfaced on wait()
+                outcome["error"] = e
+                return
+            outcome["ok"] = True
 
+        self._outcome = outcome
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
-        self._last_save_wall = time.monotonic()
-        self.saves += 1
         if block:
             self.wait()
         return True
 
+    def _fold(self) -> None:
+        """Fold a *finished* background save's outcome into the manager
+        (non-blocking): `saves` counts durable commits, never optimistic
+        dispatches; a failure rewinds the interval clock so :meth:`due`
+        re-arms, and parks the error for :meth:`wait` to raise."""
+        t = self._thread
+        if t is None or t.is_alive():
+            return
+        t.join()
+        self._thread = None
+        outcome, self._outcome = self._outcome, None
+        if outcome is None:
+            return
+        if "error" in outcome:
+            self._save_error = outcome["error"]
+            self.save_failures += 1
+            self._last_save_wall = outcome["prev_wall"]
+        elif outcome.get("ok"):
+            self.saves += 1
+
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
-            self._thread = None
+        self._fold()
+        if self._save_error is not None:
+            err, self._save_error = self._save_error, None
+            raise RuntimeError(
+                "background checkpoint save failed "
+                "(original attempt and one retry)") from err
 
     def _gc(self) -> None:
         dirs = sorted(p for p in self.directory.glob("step_*")

@@ -489,6 +489,7 @@ class AdaptiveScheme(FaultToleranceScheme):
         self._live_failures = 0
         self._live_step0 = None
         self.unmaskable_decisions = []
+        self.degraded_decisions = []
         if self.initial is None:
             self._mode_name = self._best_mode(p.mtbf)
         self.history = [(0.0, self._mode_name)]
@@ -542,6 +543,41 @@ class AdaptiveScheme(FaultToleranceScheme):
             rollback_steps=rollback_steps,
             t_restart=t_restart, t_reshape=t_reshape)
         self.unmaskable_decisions.append(est)
+        return est["action"]
+
+    def decide_degraded(self, *, factors, candidates, remaining_steps: int,
+                        seconds_per_step: float, dp_full: int,
+                        dp_new: int = 0, maskable: bool = True,
+                        alive=None, demoted=(), rollback_steps: int = 0,
+                        t_restart: float | None = None,
+                        t_reshape: float | None = None,
+                        t_demote: float = 0.0, **_) -> str:
+        """The gray-failure decision: the detector flagged
+        ``candidates`` as stragglers (per-group slowdown ``factors``),
+        and the selector weighs tolerate vs SPARe demotion vs elastic
+        reshape vs restart with the closed-form degraded-throughput
+        model (:func:`repro.health.policy.degraded_ttt_estimates` —
+        step time = max factor over groups still in the barrier).
+        ``maskable=False`` means RECTLR cannot re-cover the candidate
+        set, ruling demotion out. Outage defaults come from the
+        prepared :class:`DESParams` as in :meth:`decide_unmaskable`;
+        every estimate lands in ``degraded_decisions``."""
+        from repro.health.policy import degraded_ttt_estimates
+        p = getattr(self, "p", None)
+        if t_restart is None:
+            t_restart = p.t_restart if p is not None else 3600.0
+        if t_reshape is None:
+            t_reshape = p.t_reconfig if p is not None else 1.0
+        est = degraded_ttt_estimates(
+            factors=factors, candidates=candidates,
+            remaining_steps=remaining_steps,
+            seconds_per_step=seconds_per_step,
+            dp_full=dp_full, dp_new=dp_new, maskable=maskable,
+            alive=alive, demoted=demoted, rollback_steps=rollback_steps,
+            t_restart=t_restart, t_reshape=t_reshape, t_demote=t_demote)
+        if not hasattr(self, "degraded_decisions"):
+            self.degraded_decisions = []
+        self.degraded_decisions.append(est)
         return est["action"]
 
 

@@ -259,12 +259,28 @@ class ElasticMeshExecutor(MeshExecutor):
             # running — surviving hardware stays powered throughout
             notify(self.t_reshape, kind="reshape")
 
+    def _degraded_dp_new(self, victims: list[int]) -> int:
+        """DP degree a health-driven reshape excluding the straggler
+        set would continue at — the elastic option the degraded-TTT
+        policy weighs against demotion."""
+        dead = set(int(v) for v in victims)
+        surv = [w for w in range(self.state.n)
+                if self.state.alive[w] and w not in dead]
+        return shrink_degree(self._full_n, len(surv))
+
     def _global_restart(self) -> None:
         if self.state.n != self._full_n:
             self.restore_full_mesh()
         else:
             self.state.reset()
         self._phys_alive[:] = True
+        # same demotion/detector reset as the base restart path (the
+        # outage swaps degraded hardware)
+        self._demoted.clear()
+        self._demote_snapshot = None
+        self._schedule_version += 1
+        if self.detector is not None:
+            self.detector.reset()
 
     # ------------------------------------------------------------- #
     # snapshot / rollback (EF rows follow their physical devices)   #

@@ -538,6 +538,25 @@ class MeshExecutor(SpareTrainer):
             args.append(self._ef_state)
         return fn.lower(*args).compile().as_text()
 
+    def prewarm_depths(self, depths) -> None:
+        """Compile the step executable for each stack depth in
+        ``depths`` ahead of need. A SPARe demotion on a cyclic Golomb
+        hosting typically forces ``S_A`` one deeper (the supplier
+        reassignment cascades around the hosting cycle), so a
+        latency-sensitive run warms both depths up front and the
+        demote itself is a pure weight-table edit — zero
+        run-attributed recompiles, like any mask at constant shape.
+        Warm-up compiles count toward ``total_recompiles`` only (the
+        :meth:`compiled_step_text` contract)."""
+        import copy
+        probe = copy.deepcopy(self.state)
+        for s_a in sorted(set(int(d) for d in depths)):
+            if not 1 <= s_a <= self.state.r:
+                raise ValueError(f"stack depth {s_a} outside "
+                                 f"[1, r={self.state.r}]")
+            probe.s_a = s_a
+            self.compiled_step_text(state=probe)
+
     def donated_leaves(self) -> int:
         """Flat leaf count across the step's donated argnums — the
         number of input/output aliases the donation-audit pass expects

@@ -1,0 +1,29 @@
+"""repro.health — gray-failure resilience: straggler detection + demotion.
+
+Fail-stop recovery (mask -> reshape -> restart, PRs 1-9) misses the
+dominant availability tax at 100k+ GPUs: *fail-slow* components —
+degraded NICs, thermal throttling, flaky links — that silently drag
+every synchronous step down to the straggler's pace. This package
+closes that gap:
+
+* :mod:`repro.health.detector` — an online straggler detector over
+  per-group step timings: EWMA smoothing, median + MAD robust z-score,
+  flag/clear hysteresis and dwell counters (deterministic, pure
+  numpy);
+* :mod:`repro.health.policy` — the closed-form degraded-throughput
+  model (step time = max slowdown factor over groups still in the
+  sync barrier) comparing tolerate vs SPARe *demotion* (a pure
+  weight-table edit, zero recompiles) vs elastic reshape vs restart —
+  the gray-failure analogue of :func:`repro.elastic.policy
+  .ttt_estimates`, evaluated live by
+  :meth:`repro.des.schemes.AdaptiveScheme.decide_degraded`.
+
+Fail-slow *injection* lives with the other failure models
+(:class:`repro.scenarios.models.SlowdownModel` and the injector's slow
+channel); the trainer's health tick and the serving tier's
+health-weighted routing consume this package.
+"""
+from repro.health.detector import HealthReport, StragglerDetector
+from repro.health.policy import degraded_ttt_estimates
+
+__all__ = ["StragglerDetector", "HealthReport", "degraded_ttt_estimates"]

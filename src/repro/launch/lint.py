@@ -16,7 +16,8 @@ deterministic report:
   sweeps the live :class:`~repro.exec.executor.MeshExecutor` variants
   over the FULL RECTLR-recoverable survivor space, the reshaped-mesh
   executables of :class:`~repro.elastic.ElasticMeshExecutor` after a
-  degraded-continue shrink, plus the
+  degraded-continue shrink, the demoted-set program a gray-failure
+  SPARe demotion (``repro.health``) switches to, plus the
   :class:`~repro.train.trainer.SpareTrainer` jit site and every
   :class:`~repro.serve.engine.ExecutableCache` program of a warmed
   :class:`~repro.serve.engine.ServeEngine`.
@@ -165,6 +166,45 @@ def certify_executors() -> Report:
         report.note("donation-audit",
                     donated_leaves_audited=elx.donated_leaves())
         elx.close()
+
+    # the gray tier's demoted-set executables: a fail-slow group
+    # proactively masked out of the weighted sync runs the SAME mesh
+    # shape one stack deeper — certify the demoted program with the full
+    # pass set through the real demote path, then re-admit and record
+    # that the weight table restored
+    import numpy as np
+
+    from repro.health.detector import HealthReport
+    from repro.train.injection import ScriptedInjector
+    from repro.train.trainer import TrainReport as _TrainReport
+
+    tag = "executor:demoted"
+    dex = MeshExecutor(cfg, sync="shard_map", n_groups=4, redundancy=2,
+                       model_degree=2, seq=32, per_type_batch=2,
+                       total_steps=50)
+    factors = np.ones(4)
+    factors[0] = 3.0
+    hr = HealthReport(step=0, smoothed=factors * 64.0, zscores=factors,
+                      factors=factors, flagged=(0,), newly_flagged=(0,))
+    dinj = ScriptedInjector({}, seconds_per_step=64.0, n_groups=4)
+    dex._demote([0], hr, dinj, _TrainReport())
+    text = dex.compiled_step_text()
+    report.extend(donation_audit(text, dex.donated_leaves(), tag))
+    report.extend(hot_path_purity(text, tag))
+    report.extend(wire_dtype_policy(text, tag))
+    report.extend(ef_state_policy(dex, tag))
+    found, certified = schedule_determinism_executor(dex, tag)
+    report.extend(found)
+    report.note("collective-schedule-determinism",
+                survivor_sets_certified=certified)
+    report.note("donation-audit",
+                donated_leaves_audited=dex.donated_leaves())
+    dex._readmit([0], hr, dinj, _TrainReport())
+    report.note("cells", demoted_programs_certified=1,
+                readmit_schedule_restored=int(
+                    bool(dex.state.alive.all())
+                    and int(dex.state.s_a) == 1))
+    dex.close()
 
     # the emulation trainer's jit site (donate_argnums=(0, 1))
     from repro.data.pipeline import spare_batch

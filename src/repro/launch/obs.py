@@ -86,6 +86,12 @@ def attribution_table(view: TraceView) -> list[dict]:
     * ``reshape_s`` — the modeled resharding outage of an elastic
       degraded-continue (``reshape_seconds`` span arg): the event kept
       training at a reduced DP degree instead of restarting.
+
+    Gray-failure events get their own kinds: ``demote`` (a fail-slow
+    group proactively masked out of the weighted sync — the victims
+    were alive, just slow) and ``readmit`` (the healed group folded
+    back in); both are weight-table edits, so their cost lands in
+    ``masking_s`` like any mask.
     """
     step_us = _median_step_us(view)
     rows = []
@@ -94,14 +100,25 @@ def attribution_table(view: TraceView) -> list[dict]:
         wipe = bool(args.get("wipeout"))
         reshape = bool(args.get("reshape"))
         depth = int(args.get("rollback_depth", 0))
-        kind = "reshape" if reshape else ("restart" if wipe else "mask")
+        if args.get("demote"):
+            kind = "demote"
+        elif args.get("readmit"):
+            kind = "readmit"
+        elif reshape:
+            kind = "reshape"
+        elif wipe:
+            kind = "restart"
+        else:
+            kind = "mask"
         rows.append({
             "t_s": s.ts / 1e6,
             "step": args.get("step"),
             "kind": kind,
             "victims": args.get("victims", []),
             "handling_s": s.dur / 1e6,
-            "masking_s": s.dur / 1e6 if kind == "mask" else 0.0,
+            "masking_s": (s.dur / 1e6
+                          if kind in ("mask", "demote", "readmit")
+                          else 0.0),
             "rollback_depth": depth,
             "rollback_s": depth * step_us / 1e6,
             "restart_s": float(args.get("restart_seconds", 0.0)),
@@ -171,7 +188,8 @@ def _print_report(rep: dict, view: TraceView, timeline: int) -> None:
         print(f"  {'TOTAL':>22} {'':<14} {lost['masking_s']:>9.3f} "
               f"{lost['rollback_s']:>10.3f} {lost['restart_s']:>9.1f} "
               f"{lost['reshape_s']:>9.1f}")
-        print("  (masking = recovery handling that kept training; "
+        print("  (masking = recovery handling that kept training, incl. "
+              "demote/readmit weight-table edits for fail-slow groups; "
               "rollback = wiped steps x median step; restart = modeled "
               "outage on the injector clock; reshape = modeled elastic "
               "resharding outage, training continued degraded)")

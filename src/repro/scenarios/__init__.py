@@ -34,6 +34,9 @@ from .models import (
     DiurnalModel,
     TraceReplayModel,
     SuperposedModel,
+    SlowdownModel,
+    FailSlowModel,
+    FlakyLinkModel,
     get_failure_model,
     list_failure_models,
     register_failure_model,
@@ -43,6 +46,7 @@ from .models import (
     sample_kill_batches,
     bind_model,
     drain_event_window,
+    drain_slow_window,
     to_step_events,
 )
 from .campaign import (
@@ -62,9 +66,10 @@ __all__ = [
     "ClusterTopology", "TOPOLOGY_PRESETS", "topology_from_spec",
     "FailureModel", "RenewalModel", "PoissonModel", "CorrelatedModel",
     "DiurnalModel", "TraceReplayModel", "SuperposedModel",
+    "SlowdownModel", "FailSlowModel", "FlakyLinkModel",
     "get_failure_model", "list_failure_models", "register_failure_model",
     "model_from_spec", "bundled_traces", "load_trace", "sample_kill_batches",
-    "bind_model", "drain_event_window", "to_step_events",
+    "bind_model", "drain_event_window", "drain_slow_window", "to_step_events",
     "CampaignSpec", "ScenarioCell", "CAMPAIGN_PRESETS", "cell_seed",
     "run_cell", "run_campaign", "parallel_map", "aggregate",
     "ranking_by_regime", "save_artifacts",

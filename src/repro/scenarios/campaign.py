@@ -38,6 +38,7 @@ __all__ = [
     "aggregate", "ranking_by_regime", "save_artifacts",
     "TRAINER_REGIME_MODELS", "trainer_regime_cells", "run_trainer_cell",
     "elastic_regime_cells", "run_elastic_cell",
+    "gray_regime_cells", "run_gray_cell",
 ]
 
 #: SimResult fields copied into each cell's result row (all deterministic)
@@ -541,6 +542,166 @@ def run_elastic_cell(cell: dict) -> dict:
         "ttt_s": ttt,
         "policy": (ex.policy_log[-1] if getattr(ex, "policy_log", None)
                    else None),
+        "loss_first": rep.losses[0] if rep.losses else None,
+        "loss_last": rep.losses[-1] if rep.losses else None,
+        "elapsed_s": elapsed,
+    }
+    ex.close()
+    return row
+
+
+# ------------------------------------------------------------------ #
+# gray-failure cells (tolerate vs demote under the same fail-slow)   #
+# ------------------------------------------------------------------ #
+def gray_regime_cells(arch: str = "qwen2.5-3b", n: int = 8, r: int = 2,
+                      steps: int = 32, slow_group: int = 0,
+                      slow_factor: float = 3.0, slow_step: int = 4,
+                      heal_step: int = 16, seq: int = 32,
+                      per_type_batch: int = 2, model_degree: int = 1,
+                      seconds_per_step: float = 64.0,
+                      t_restart: float = 3600.0,
+                      snapshot_every: int = 10,
+                      trace_dir: str | None = None) -> list[dict]:
+    """The gray-failure campaign: the SAME scripted fail-slow episode
+    (one DP group degraded ``slow_factor`` x for poll windows
+    ``[slow_step, heal_step)``) through two mitigation arms on the live
+    emulated mesh.
+
+    * ``tolerate`` — no detector: every synchronous step stretches to
+      the straggler's pace (the barrier makes one slow group everyone's
+      problem);
+    * ``demote`` — a :class:`repro.health.StragglerDetector` flags the
+      group, the adaptive scheme's ``decide_degraded`` picks proactive
+      SPARe demotion (a pure weight-table edit), and the group is
+      re-admitted bit-identically once the episode heals.
+
+    Both arms run the adaptive scheme pinned to SPARe masking; no group
+    ever actually dies, so any TTT gap is pure gray-failure handling.
+    """
+    arms = [("tolerate", False), ("demote", True)]
+    cells = []
+    for arm, detect in arms:
+        cell = {
+            "kind": "gray", "arm": arm, "arch": arch, "n": n, "r": r,
+            "steps": steps, "detect": detect,
+            "slow_group": slow_group, "slow_factor": slow_factor,
+            "slow_step": slow_step, "heal_step": heal_step,
+            "seq": seq, "per_type_batch": per_type_batch,
+            "model_degree": model_degree,
+            "seconds_per_step": seconds_per_step,
+            "t_restart": t_restart, "snapshot_every": snapshot_every,
+        }
+        if trace_dir is not None:
+            cell["trace"] = str(Path(trace_dir) / f"{arm}.trace.json")
+        cells.append(cell)
+    return cells
+
+
+def run_gray_cell(cell: dict) -> dict:
+    """Worker entry point for gray cells: one scripted fail-slow episode
+    through one mitigation arm, returning everything the acceptance
+    gates check — flag/demote/re-admit step indices, the post-demotion
+    step windows (throughput restoration), run-attributed recompiles
+    with both stacking depths pre-warmed (demotion at r=2 flips S_A
+    1 -> 2, and the gate freezes recompiles at zero), and whether the
+    re-admitted weight table is bit-identical to a never-demoted one.
+
+    ``ttt_s`` is the injector clock at run end plus any residual work
+    deficit at the healthy rate — with no kills in the script it is
+    exactly the sum of the (inflation-stretched) step windows.
+    """
+    import numpy as np
+
+    from ..configs import smoke_config
+    from ..core.state import SpareState
+    from ..des import get_scheme
+    from ..exec import MeshExecutor
+    from ..train.injection import ScriptedInjector
+
+    cfg = smoke_config(cell.get("arch", "qwen2.5-3b")).scaled(grad_accum=1)
+    tel = None
+    if cell.get("trace"):
+        from ..obs import Telemetry
+        tel = Telemetry()
+    n, steps = cell["n"], cell["steps"]
+    sps = cell["seconds_per_step"]
+    det = None
+    if cell["detect"]:
+        from ..health import StragglerDetector
+        det = StragglerDetector(n)
+    ex = MeshExecutor(
+        cfg, n_groups=n, redundancy=cell["r"],
+        model_degree=cell.get("model_degree", 1),
+        seq=cell.get("seq", 32),
+        per_type_batch=cell.get("per_type_batch", 2),
+        total_steps=steps, t_restart=cell.get("t_restart", 3600.0),
+        scheme=get_scheme("adaptive", r=cell["r"], initial="spare"),
+        telemetry=tel, detector=det)
+    # warm every stacking depth a demotion can reach BEFORE the run:
+    # run-attributed recompiles must stay frozen at zero through the
+    # demote -> re-admit round trip (the no-recompile acceptance gate)
+    ex.prewarm_depths(range(1, cell["r"] + 1))
+    inj = ScriptedInjector(
+        {}, seconds_per_step=sps,
+        slow_schedule={cell["slow_step"]: [
+            (cell["slow_group"], cell["slow_factor"], cell["heal_step"])]},
+        n_groups=n)
+    t0 = time.perf_counter()
+    rep = ex.run(steps, injector=inj,
+                 snapshot_every=cell.get("snapshot_every", 10))
+    elapsed = time.perf_counter() - t0
+
+    demote_steps = [e.step for e in rep.events if e.demote]
+    readmit_steps = [e.step for e in rep.events if e.readmit]
+    flag_step = None
+    if det is not None:
+        flag_step = next((r.step for r in det.reports if len(r.flagged)),
+                         None)
+    # step windows while demoted-but-still-slow: demotion lands in the
+    # health tick after `demote_step` completes, so the first window it
+    # can deflate is the next poll
+    post = []
+    if demote_steps:
+        post = inj.window_log[demote_steps[0] + 1:cell["heal_step"]]
+    # re-admitted weight table vs a never-demoted run: SPARe recovery is
+    # pure state, so bit-identical state => bit-identical schedule
+    ref = SpareState(n, cell["r"])
+    readmit_identical = bool(
+        np.array_equal(ex.state.stacks, ref.stacks)
+        and np.array_equal(ex.state.alive, ref.alive)
+        and int(ex.state.s_a) == int(ref.s_a)
+        and np.array_equal(ex.state.supplier, ref.supplier))
+
+    work = float(rep.steps_done)
+    for e in rep.events:
+        if e.wipeout:
+            work -= e.rollback_depth
+    deficit = max(float(steps) - work, 0.0)
+    ttt = inj.clock + deficit * sps
+
+    if tel is not None:
+        tel.dump_trace(cell["trace"])
+        tel.metrics.dump(str(cell["trace"]) + ".metrics.json")
+    row = {
+        "key": cell_key(cell),
+        "arm": cell["arm"],
+        "n": n, "r": cell["r"],
+        "steps_done": rep.steps_done,
+        "demotes": rep.demotes,
+        "readmits": rep.readmits,
+        "flag_step": flag_step,
+        "demote_step": demote_steps[0] if demote_steps else None,
+        "readmit_step": readmit_steps[0] if readmit_steps else None,
+        "post_demote_window_max": max(post) if post else None,
+        "healthy_window_s": sps,
+        "recompiles": rep.recompiles,
+        "total_recompiles": ex.total_recompiles,
+        "compiled_entries": len(ex.cache_keys),
+        "readmit_identical": readmit_identical,
+        "wipeouts": rep.wipeouts,
+        "ttt_s": ttt,
+        "health_actions": [h["action"] for h in ex.health_log
+                           if h["action"] != "tolerate"],
         "loss_first": rep.losses[0] if rep.losses else None,
         "loss_last": rep.losses[-1] if rep.losses else None,
         "elapsed_s": elapsed,

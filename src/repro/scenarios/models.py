@@ -37,6 +37,12 @@ Registered models (``get_failure_model`` / campaign ``kind`` keys):
   traces shaped like published cluster logs ship in ``traces/``.
 * ``superposed`` — superposition of independent component streams
   (e.g. quiet Poisson background + rare pod kills).
+* ``fail_slow`` / ``flaky_link`` — *gray-failure* streams
+  (:class:`SlowdownModel`): arrivals open slowdown episodes that
+  inflate victims' per-step time instead of killing them — persistent
+  (degraded NIC / thermal throttle) or self-healing (flaky links) —
+  consumed by the injector's slow channel and the
+  :mod:`repro.health` straggler detector.
 """
 from __future__ import annotations
 
@@ -52,9 +58,10 @@ from .topology import ClusterTopology, topology_from_spec
 __all__ = [
     "FailureModel", "RenewalModel", "PoissonModel", "CorrelatedModel",
     "RackBurstModel", "DiurnalModel", "TraceReplayModel", "SuperposedModel",
+    "SlowdownModel", "FailSlowModel", "FlakyLinkModel",
     "register_failure_model", "get_failure_model", "list_failure_models",
     "model_from_spec", "bundled_traces", "load_trace", "sample_kill_batches",
-    "bind_model", "drain_event_window", "to_step_events",
+    "bind_model", "drain_event_window", "drain_slow_window", "to_step_events",
 ]
 
 TRACES_DIR = Path(__file__).parent / "traces"
@@ -469,6 +476,117 @@ class SuperposedModel(FailureModel):
 
 
 # ------------------------------------------------------------------ #
+# fail-slow (gray-failure) streams                                   #
+# ------------------------------------------------------------------ #
+class SlowdownModel(FailureModel):
+    """Base class for *fail-slow* streams: degraded NICs, thermal
+    throttling, flaky links. Unlike fail-stop models these never kill a
+    group — each arrival opens a slowdown *episode* that inflates the
+    victims' per-step time by a multiplicative ``factor`` until the
+    episode's ``until`` time (``math.inf`` for persistent degradation
+    that only a repair/restart clears). Because every collective is
+    synchronous, one slowed group drags the whole step down to its
+    pace — which is exactly what SPARe demotion (a weight-table edit)
+    buys back.
+
+    Same registry / ``bind`` contract as :class:`FailureModel`; the
+    extra hook is :meth:`draw_episode`. Arrivals are exponential with
+    mean ``mtbs`` (mean time between slowdowns) — slow events track
+    component count, not survivor count, so no survivor scaling.
+    """
+
+    #: marks the model as a slowdown (not kill) stream for the injector
+    degrades = True
+    name = "slow-base"
+
+    #: mean seconds between slowdown episodes
+    mtbs: float = 3600.0
+
+    def next_arrival(self, now: float, alive: int, n: int) -> float:
+        return now + float(self.rng.exponential(self.mtbs))
+
+    def draw_victims(self, now: float, dead: set[int]) -> list[int]:
+        return []                      # slow streams never kill
+
+    def draw_episode(self, now: float, slowed: set[int],
+                     ) -> tuple[list[int], float, float]:
+        """Return ``(groups, factor, until)`` for the episode at ``now``.
+        ``until`` is the absolute end time (``math.inf`` = persistent)."""
+        raise NotImplementedError
+
+    # ---------------------------------------------------------- #
+    def _seed_victim(self, slowed: set[int]) -> int:
+        # prefer groups not already degraded so episodes spread out;
+        # one rng.choice either way keeps the draw order fixed
+        fresh = [w for w in range(self.n) if w not in slowed]
+        return int(self.rng.choice(fresh if fresh else list(range(self.n))))
+
+    def _draw_factor(self, lo: float, hi: float) -> float:
+        # log-uniform in [lo, hi]; always one rng.random() draw so the
+        # stream stays deterministic even when lo == hi
+        u = float(self.rng.random())
+        if hi <= lo:
+            return float(lo)
+        return float(math.exp(math.log(lo) + u * (math.log(hi) - math.log(lo))))
+
+
+@register_failure_model
+class FailSlowModel(SlowdownModel):
+    """Persistent per-group degradation (degraded NIC / thermal
+    throttle): each arrival slows one group — or, with ``scope`` set,
+    the seed's whole blast radius (a bad ToR switch slows its rack) —
+    by a log-uniform factor in ``[factor_min, factor_max]``, forever
+    (until an external repair: demotion + later restart, or the
+    injector's outage reset).
+    """
+
+    name = "fail_slow"
+
+    def __init__(self, mtbs: float = 3600.0, factor_min: float = 2.0,
+                 factor_max: float = 4.0, scope: str | None = None):
+        if factor_min < 1.0:
+            raise ValueError("slowdown factors must be >= 1")
+        self.mtbs = mtbs
+        self.factor_min = factor_min
+        self.factor_max = factor_max
+        self.scope = scope
+
+    def bind(self, p, rng, topology=None) -> None:
+        super().bind(p, rng, topology)
+        self.topo = topology_from_spec(topology, n_groups=p.n)
+
+    def draw_episode(self, now, slowed):
+        v = self._seed_victim(slowed)
+        factor = self._draw_factor(self.factor_min, self.factor_max)
+        groups = (list(self.topo.blast_radius(v, self.scope))
+                  if self.scope else [v])
+        return groups, factor, math.inf
+
+
+@register_failure_model
+class FlakyLinkModel(FailSlowModel):
+    """Intermittent flaky-link episodes: like :class:`FailSlowModel`
+    but each episode heals on its own after an exponential duration
+    with mean ``episode_len`` seconds (link retraining, transient
+    congestion). Draw order per event: victim, factor, duration.
+    """
+
+    name = "flaky_link"
+
+    def __init__(self, mtbs: float = 1800.0, episode_len: float = 600.0,
+                 factor_min: float = 1.5, factor_max: float = 3.0,
+                 scope: str | None = None):
+        super().__init__(mtbs=mtbs, factor_min=factor_min,
+                         factor_max=factor_max, scope=scope)
+        self.episode_len = episode_len
+
+    def draw_episode(self, now, slowed):
+        groups, factor, _ = super().draw_episode(now, slowed)
+        duration = float(self.rng.exponential(self.episode_len))
+        return groups, factor, now + duration
+
+
+# ------------------------------------------------------------------ #
 # event-stream adapters                                              #
 # ------------------------------------------------------------------ #
 def drain_event_window(model: FailureModel, next_fail: float, end: float,
@@ -500,6 +618,33 @@ def drain_event_window(model: FailureModel, next_fail: float, end: float,
             events.append((next_fail, victims))
         next_fail = model.next_arrival(next_fail, max(alive, 1), n)
     return events, next_fail, alive
+
+
+def drain_slow_window(model: SlowdownModel, next_slow: float, end: float,
+                      slowed: set[int],
+                      ) -> tuple[list[tuple[float, list[int], float, float]],
+                                 float]:
+    """Harvest every slowdown episode with arrival time ``<= end`` —
+    the fail-slow counterpart of :func:`drain_event_window`, with the
+    same pinned RNG discipline: per event one ``draw_episode`` call
+    followed by one ``next_arrival`` re-arm.
+
+    ``slowed`` (the groups currently degraded, mutated in place) only
+    biases victim selection; overlap resolution — max factor wins,
+    episodes extend — is the caller's (the injector keeps per-group
+    ``(factor, until)`` state and expires entries itself).
+
+    Returns ``(episodes, next_slow)`` where each episode is
+    ``(arrival_time, groups, factor, until)``.
+    """
+    episodes: list[tuple[float, list[int], float, float]] = []
+    while next_slow <= end:
+        groups, factor, until = model.draw_episode(next_slow, slowed)
+        if groups:
+            episodes.append((next_slow, list(groups), factor, until))
+            slowed.update(groups)
+        next_slow = model.next_arrival(next_slow, model.n, model.n)
+    return episodes, next_slow
 
 
 def bind_model(model, n: int, rng: np.random.Generator,

@@ -61,13 +61,18 @@ class ReplicaServer:
     def __init__(self, model: Model, params, *, n_replicas: int,
                  topology: ClusterTopology | None = None,
                  injector=None, ckpt=None, engine_kwargs: dict,
-                 telemetry=None):
+                 telemetry=None, detector=None):
         self.model = model
         self.params = params
         self.topology = topology
         self.injector = injector
         self.ckpt = ckpt
         self.telemetry = telemetry      # repro.obs.Telemetry | None
+        # optional repro.health.StragglerDetector (n_groups ==
+        # n_replicas): per-tick replica timings fold into the routing
+        # weights, so traffic steers around fail-slow replicas long
+        # before they die
+        self.detector = detector
         if telemetry is not None and injector is not None \
                 and hasattr(injector, "telemetry"):
             injector.telemetry = telemetry
@@ -98,13 +103,33 @@ class ReplicaServer:
     # weight table + routing                                         #
     # ------------------------------------------------------------- #
     @property
+    def health_factors(self) -> np.ndarray:
+        """Per-replica slowdown estimates from the detector (all 1.0
+        without one)."""
+        n = self.spare.n
+        if self.detector is None or not self.detector.reports:
+            return np.ones(n, np.float64)
+        return np.maximum(self.detector.reports[-1].factors, 1.0)
+
+    @property
     def weights(self) -> np.ndarray:
-        """SPARe-style masking weights: a dead replica's traffic share is
-        re-distributed to survivors by zeroing its entry — data, not
-        program."""
+        """SPARe-style masking weights with detector health folded in:
+        a dead replica's entry is zero; a live replica's share is
+        proportional to its estimated throughput ``1 / factor``; and a
+        replica the detector has *flagged* as a straggler is routed
+        around entirely (weight 0) while any unflagged replica
+        survives — all of it data, not program."""
         alive = self.spare.alive.astype(np.float64)
-        total = alive.sum()
-        return alive / total if total else alive
+        w = alive / self.health_factors
+        if self.detector is not None:
+            flagged = list(self.detector.flagged)
+            if flagged:
+                spared = w.copy()
+                spared[flagged] = 0.0
+                if spared.any():   # someone healthy remains: avoid slow
+                    w = spared
+        total = w.sum()
+        return w / total if total else w
 
     @property
     def recompiles(self) -> int:
@@ -125,8 +150,10 @@ class ReplicaServer:
             self.engines[0].submit(req)
             return
         self._credits += w
-        pick = int(np.argmax(np.where(self.spare.alive, self._credits,
-                                      -np.inf)))
+        # only weight-bearing replicas are eligible: a flagged-slow
+        # replica (weight 0) must not win on stale credits
+        pick = int(np.argmax(np.where(self.spare.alive & (w > 0),
+                                      self._credits, -np.inf)))
         self._credits[pick] -= 1.0
         self.engines[pick].submit(req)
 
@@ -166,11 +193,47 @@ class ReplicaServer:
         return len(pending)
 
     # ------------------------------------------------------------- #
+    # gray failures: detector-weighted routing                       #
+    # ------------------------------------------------------------- #
+    def _health_tick(self) -> None:
+        """Feed the straggler detector one tick of per-replica timings
+        (the injector's fail-slow model on the emulated cluster; real
+        deployments would feed measured per-replica decode latencies).
+        Flag transitions surface as ``slow`` / ``healed`` events and
+        immediately reshape the routing weights."""
+        if self.detector is None or self.injector is None:
+            return
+        timings_fn = getattr(self.injector, "group_step_seconds", None)
+        if timings_fn is None:
+            return
+        t = np.asarray(timings_fn(), dtype=np.float64)
+        if t.shape != self.spare.alive.shape:
+            return
+        hr = self.detector.observe(t, alive=self.spare.alive,
+                                   step=self.step_idx)
+        tel = self.telemetry
+        for v in hr.newly_flagged:
+            self.events.append(ReplicaEvent(step=self.step_idx,
+                                            kind="slow", victims=[v]))
+            if tel is not None:
+                tel.instant("straggler", track=f"replica/{v}",
+                            args={"step": self.step_idx})
+        for v in hr.newly_cleared:
+            self.events.append(ReplicaEvent(step=self.step_idx,
+                                            kind="healed", victims=[v]))
+            if tel is not None:
+                tel.instant("healed", track=f"replica/{v}",
+                            args={"step": self.step_idx})
+        if tel is not None:
+            tel.gauge("serve.slow_replicas").set(len(hr.flagged))
+
+    # ------------------------------------------------------------- #
     # the loop                                                       #
     # ------------------------------------------------------------- #
     def step(self) -> list[FinishedRequest]:
         """One server tick: deliver failures, mask, drive live engines."""
         tel = self.telemetry
+        self._health_tick()
         if self.injector is not None:
             for ev in self.injector.poll(self.spare):
                 if tel is not None:
@@ -235,6 +298,9 @@ class ReplicaServer:
             "completed": sum(e.completed for e in self.engines),
             "recompiles": self.recompiles,
             "executables": [list(k) for k in self.exec_cache.keys],
+            "flagged_slow": ([] if self.detector is None
+                             else list(self.detector.flagged)),
+            "health_factors": self.health_factors.tolist(),
             "events": [(e.step, e.kind, e.victims, e.requeued)
                        for e in self.events],
         }

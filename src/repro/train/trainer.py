@@ -107,6 +107,11 @@ class RecoveryEvent:
     reshape: bool = False            # degraded-continue took the event
     dp_before: int = 0               # DP degree before the reshape
     dp_after: int = 0                # DP degree training continues at
+    # -- gray-failure tier (repro.health): fail-slow groups masked out --
+    # -- of the weighted sync, and masked back in when they heal       --
+    demote: bool = False             # victims were alive-but-slow, masked
+    readmit: bool = False            # healed victims rejoined the sync
+    slow_factor: float = 0.0         # detector's slowdown estimate
     # -- durations (the obs CLI's attribution table keys off these) -- #
     wall_seconds: float = 0.0        # host wall-clock handling the event
     step_seconds: float = 0.0        # step-clock cost: controller time for
@@ -127,6 +132,8 @@ class TrainReport:
     failures: int = 0
     wipeouts: int = 0
     reshapes: int = 0
+    demotes: int = 0
+    readmits: int = 0
     reorders: int = 0
     patches: int = 0
     recompiles: int = 0
@@ -156,7 +163,8 @@ class SpareTrainer:
                  t_save: float = 60.0, t_restart: float = 3600.0,
                  base_lr: float = 3e-4, total_steps: int = 1000,
                  scheme: FaultToleranceScheme | None = None,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 detector=None):
         self.cfg = cfg
         self.telemetry = telemetry
         self.state = SpareState(n_groups, redundancy)
@@ -192,6 +200,19 @@ class SpareTrainer:
         # memory tier is free — it needs no storage at all)
         self._snapshot: tuple[int, Any] | None = None
         self.step = 0
+        # gray-failure tier: an optional repro.health.StragglerDetector
+        # fed each step from the injector's per-group timings; flagged
+        # stragglers may be demoted (masked out of the weighted sync)
+        # and are re-admitted bit-identically when they heal
+        self.detector = detector
+        self.health_log: list[dict] = []
+        self._demoted: set[int] = set()
+        # (stacks, hosts, alive, s_a, supplier, schedule_version) taken
+        # just before the demoting recover(); restoring it on re-admit
+        # reproduces the pre-demotion weight table bit-for-bit as long
+        # as no other recovery touched the schedule in between
+        self._demote_snapshot: tuple | None = None
+        self._schedule_version = 0
 
     # ---------------------------------------------------------------- #
     def _compiled(self, s_a: int, report: TrainReport):
@@ -272,8 +293,264 @@ class SpareTrainer:
 
     def _global_restart(self) -> None:
         """Wipe-out: every group comes back at full capacity (the
-        modeled cluster restart) before the rollback restores params."""
+        modeled cluster restart) before the rollback restores params.
+        Degraded hardware is swapped during the outage, so demotion
+        and detector history reset with it."""
         self.state.reset()
+        self._demoted.clear()
+        self._demote_snapshot = None
+        self._schedule_version += 1
+        if self.detector is not None:
+            self.detector.reset()
+
+    # ---------------------------------------------------------------- #
+    # gray-failure tier: straggler detection -> demote / re-admit      #
+    # ---------------------------------------------------------------- #
+    def _mask_feasible(self, victims: list[int]) -> bool:
+        """Would masking ``victims`` out of the sync leave every shard
+        type covered? Probed on a scratch copy because RECTLR mutates
+        ``alive``/``supplier`` before its wipe-out short-circuit."""
+        import copy
+        probe = copy.deepcopy(self.state)
+        return not Rectlr().on_failures(probe, list(victims)).wipeout
+
+    def _degraded_dp_new(self, victims: list[int]) -> int:
+        """DP degree an elastic reshape excluding ``victims`` would
+        continue at; 0 here — the base trainer has no elastic tier."""
+        return 0
+
+    def _health_tick(self, injector, report: TrainReport) -> None:
+        """One detector observation per completed step: feed per-group
+        modeled timings, then act on verdict changes — demote freshly
+        flagged stragglers (when the degraded-TTT policy says so) and
+        re-admit demoted groups the detector has cleared."""
+        det = self.detector
+        if det is None or injector is None:
+            return
+        timings_fn = getattr(injector, "group_step_seconds", None)
+        if timings_fn is None:
+            return
+        timings = np.asarray(timings_fn(), dtype=np.float64)
+        if timings.shape != self.state.alive.shape:
+            return      # post-reshape logical/physical mismatch: skip
+        # demoted groups are schedule-dead but physically alive: keep
+        # observing them (their flag must persist until the episode
+        # actually heals, else demote/re-admit would flap)
+        live = self.state.alive.copy()
+        for g in self._demoted:
+            live[g] = True
+        hr = det.observe(timings, alive=live, step=self.step)
+        tel = self.telemetry
+        if tel is not None:
+            tel.gauge("health.flagged").set(len(hr.flagged))
+            for g in hr.newly_flagged:
+                tel.instant("straggler", track=f"dp/{g}",
+                            args={"step": self.step})
+            for g in hr.newly_cleared:
+                tel.instant("healed", track=f"dp/{g}",
+                            args={"step": self.step})
+
+        # re-admission first: a healed group rejoins before new
+        # demotions are weighed, so the policy sees the true barrier
+        healed = [g for g in sorted(self._demoted)
+                  if g not in hr.flagged and not self.state.alive[g]]
+        if healed:
+            self._readmit(healed, hr, injector, report)
+
+        candidates = [g for g in hr.flagged
+                      if g not in self._demoted and self.state.alive[g]]
+        if not candidates:
+            return
+        maskable = self._mask_feasible(candidates)
+        sps = float(getattr(injector, "seconds_per_step", 0.0) or 0.0)
+        kw = dict(
+            factors=hr.factors, candidates=candidates,
+            remaining_steps=max(self.total_steps - self.step, 1),
+            seconds_per_step=sps, dp_full=self.state.n,
+            dp_new=self._degraded_dp_new(candidates), maskable=maskable,
+            alive=self.state.alive, demoted=sorted(self._demoted),
+            rollback_steps=max(self.step - self._snapshot_step(), 0),
+            t_restart=self._t_restart)
+        decide = getattr(self.scheme, "decide_degraded", None)
+        if decide is not None:
+            action = decide(**kw)
+        else:
+            from repro.health.policy import degraded_ttt_estimates
+            action = degraded_ttt_estimates(
+                **{k: v for k, v in kw.items()},
+                t_reshape=float("inf"))["action"]
+        self.health_log.append({
+            "step": self.step, "candidates": list(candidates),
+            "factors": [round(float(hr.factors[g]), 4)
+                        for g in candidates],
+            "maskable": maskable, "action": action})
+        if action == "demote":
+            self._demote(candidates, hr, injector, report)
+        elif action == "restart":
+            self._health_restart(candidates, hr, injector, report)
+        elif action == "reshape":
+            self._health_reshape(candidates, hr, injector, report)
+        # "tolerate": keep everyone in the barrier, observe again next
+        # step — the episode may heal on its own
+
+    def _demote(self, groups: list[int], hr, injector,
+                report: TrainReport) -> None:
+        """SPARe-demote alive-but-slow ``groups``: mask them out of the
+        weighted sync exactly as a failure would — a pure weight-table
+        edit through the scheme's controller — while remembering the
+        pre-demotion schedule for bit-identical re-admission."""
+        tel = self.telemetry
+        st = self.state
+        snap = (st.stacks.copy(), st.alive.copy(), int(st.s_a),
+                st.supplier.copy())
+        factor = max(float(hr.factors[g]) for g in groups)
+        ev_args = {"step": self.step, "victims": list(groups),
+                   "demote": True}
+        with maybe_span(tel, "recover", args=ev_args):
+            outcome = self.scheme.recover(st, list(groups),
+                                          step=self.step)
+            self._schedule_version += 1
+            if outcome.wipeout:     # feasibility probe said otherwise
+                raise RuntimeError(
+                    f"demotion of {groups} wiped out the schedule "
+                    f"despite passing the feasibility probe")
+            self._demote_snapshot = (snap, self._schedule_version)
+            self._demoted.update(int(g) for g in groups)
+            notify = getattr(injector, "notify_demoted", None)
+            if notify is not None:
+                notify(groups, True)
+            event = RecoveryEvent(
+                step=self.step, victims=list(groups), wipeout=False,
+                reordered=outcome.reordered,
+                patch_count=outcome.patch_count,
+                s_a_before=outcome.s_a_before,
+                s_a_after=outcome.s_a_after, moves=outcome.moves,
+                demote=True, slow_factor=factor)
+            event.step_seconds = outcome.controller_seconds
+            ev_args.update(s_a_before=outcome.s_a_before,
+                           s_a_after=outcome.s_a_after,
+                           wipeout=False)
+        event.wall_seconds = 0.0
+        report.controller_seconds += outcome.controller_seconds
+        report.demotes += 1
+        report.reorders += int(outcome.reordered)
+        report.patches += outcome.patch_count
+        report.events.append(event)
+        if tel is not None:
+            tel.counter("health.demotes").inc()
+            tel.gauge("train.s_a").set(outcome.s_a_after)
+
+    def _readmit(self, groups: list[int], hr, injector,
+                 report: TrainReport) -> None:
+        """Fold healed ``groups`` back into the weighted sync. The fast
+        path restores the pre-demotion schedule snapshot verbatim —
+        bit-identical to an always-healthy run's weight table. If any
+        other recovery touched the schedule since the demotion, the
+        snapshot is stale: rebuild from a clean reset by replaying the
+        still-dead and still-demoted sets through the controller."""
+        tel = self.telemetry
+        st = self.state
+        s_a_before = int(st.s_a)
+        ev_args = {"step": self.step, "victims": list(groups),
+                   "readmit": True}
+        with maybe_span(tel, "recover", args=ev_args):
+            snap = self._demote_snapshot
+            clean = (snap is not None
+                     and snap[1] == self._schedule_version
+                     and set(groups) == set(self._demoted))
+            if clean:
+                stacks, alive, s_a, supplier = snap[0]
+                st.stacks[:] = stacks
+                st.alive[:] = alive
+                st.s_a = s_a
+                st.supplier[:] = supplier
+            else:
+                still_out = sorted(
+                    int(w) for w in np.flatnonzero(~st.alive)
+                    if w not in groups)
+                st.reset()
+                if still_out:
+                    self.scheme.recover(st, still_out, step=self.step)
+            st.assert_invariants()
+            self._schedule_version += 1
+            self._demote_snapshot = None
+            self._demoted.difference_update(int(g) for g in groups)
+            notify = getattr(injector, "notify_demoted", None)
+            if notify is not None:
+                notify(groups, False)
+            event = RecoveryEvent(
+                step=self.step, victims=list(groups), wipeout=False,
+                reordered=False, patch_count=0, s_a_before=s_a_before,
+                s_a_after=int(st.s_a), readmit=True)
+            ev_args.update(s_a_before=s_a_before, s_a_after=int(st.s_a),
+                           wipeout=False)
+        report.readmits += 1
+        report.events.append(event)
+        if tel is not None:
+            tel.counter("health.readmits").inc()
+            tel.gauge("train.s_a").set(int(st.s_a))
+
+    def _health_restart(self, groups: list[int], hr, injector,
+                        report: TrainReport) -> None:
+        """The policy judged the degradation worth a full restart: swap
+        the slow hardware during the outage and roll back."""
+        tel = self.telemetry
+        ev_args = {"step": self.step, "victims": list(groups),
+                   "demote": False}
+        with maybe_span(tel, "recover", args=ev_args):
+            report.wipeouts += 1
+            self._global_restart()
+            rolled_from = self.step
+            self.step, (self.params, self.opt_state) = self._rollback()
+            sec_per_step = float(getattr(
+                injector, "seconds_per_step", 0.0) or 0.0)
+            event = RecoveryEvent(
+                step=rolled_from, victims=list(groups), wipeout=True,
+                reordered=False, patch_count=0, s_a_before=1,
+                s_a_after=1, rollback_depth=rolled_from - self.step,
+                slow_factor=max(float(hr.factors[g]) for g in groups))
+            event.step_seconds = event.rollback_depth * sec_per_step
+            event.restart_seconds = self._t_restart
+            ev_args.update(wipeout=True,
+                           rollback_depth=event.rollback_depth,
+                           restart_seconds=event.restart_seconds)
+            notify = getattr(injector, "notify_outage", None)
+            if notify is not None:
+                notify(self._t_restart, kind="restart")
+        report.events.append(event)
+        if tel is not None:
+            tel.counter("train.wipeouts").inc()
+            tel.counter("train.rollback_steps").inc(event.rollback_depth)
+
+    def _health_reshape(self, groups: list[int], hr, injector,
+                        report: TrainReport) -> None:
+        """Elastic escape hatch: shrink the mesh away from the slow
+        groups. Only meaningful where :meth:`_apply_reshape` exists
+        (the elastic executor); the base policy never picks it because
+        :meth:`_degraded_dp_new` returns 0."""
+        event = RecoveryEvent(
+            step=self.step, victims=list(groups), wipeout=False,
+            reordered=False, patch_count=0,
+            s_a_before=int(self.state.s_a), s_a_after=int(self.state.s_a),
+            slow_factor=max(float(hr.factors[g]) for g in groups))
+        tel = self.telemetry
+        ev_args = {"step": self.step, "victims": list(groups),
+                   "reshape": True}
+        with maybe_span(tel, "recover", args=ev_args):
+            report.reshapes += 1
+            self._apply_reshape(event, list(groups), injector, report)
+            self._schedule_version += 1
+            # the reshape rebuilt the schedule in a new group space:
+            # demotion bookkeeping does not survive it
+            self._demoted.clear()
+            self._demote_snapshot = None
+            ev_args.update(dp_before=event.dp_before,
+                           dp_after=event.dp_after,
+                           reshape_seconds=event.reshape_seconds)
+        report.events.append(event)
+        if tel is not None:
+            tel.counter("train.reshapes").inc()
+            tel.gauge("train.dp_degree").set(event.dp_after)
 
     # ---------------------------------------------------------------- #
     def run(self, steps: int,
@@ -312,6 +589,9 @@ class SpareTrainer:
                 with maybe_span(tel, "recover", args=ev_args):
                     outcome = self.scheme.recover(self.state, victims,
                                                   step=self.step)
+                    # any fail-stop recovery invalidates the demotion
+                    # snapshot (re-admit falls back to a clean rebuild)
+                    self._schedule_version += 1
                     report.controller_seconds += outcome.controller_seconds
                     action = "mask"
                     if outcome.wipeout:
@@ -422,6 +702,9 @@ class SpareTrainer:
                 tel.histogram("train.step_seconds").observe(step_span.dur)
                 if step_span.dur > 0:
                     tel.gauge("train.steps_per_s").set(1.0 / step_span.dur)
+            # gray-failure tier: one detector observation per completed
+            # step; may demote stragglers or re-admit healed groups
+            self._health_tick(injector, report)
         if self.ckpt is not None:
             self.ckpt.wait()
             # forced/trailing saves land between snapshot boundaries:

@@ -199,3 +199,127 @@ def test_manager_threads_clock_to_manifest(tmp_path):
     man = json.loads(
         (tmp_path / "step_00000003" / "manifest.json").read_text())
     assert man["time"] == 42.0
+
+
+class _FakeMonotonic:
+    """Injectable interval clock: advances only when told to."""
+
+    def __init__(self, start: float = 1000.0):
+        self.now = start
+
+    def __call__(self) -> float:
+        return self.now
+
+
+def test_due_is_deterministic_with_injected_monotonic(tmp_path):
+    """``due()`` must consult the injected monotonic clock, never the
+    wall — the interval decision becomes a pure function of the fake."""
+    fake = _FakeMonotonic()
+    mgr = CheckpointManager(tmp_path, n_groups=8, redundancy=3, mtbf=300,
+                            t_save=60, t_restart=3600, monotonic=fake)
+    assert not mgr.due()
+    fake.now += mgr.interval - 1e-6
+    assert not mgr.due()
+    fake.now += 2e-6                      # cross the Eq.-1 interval
+    assert mgr.due()
+    # a save re-arms the interval from the injected clock's reading
+    assert mgr.maybe_save(1, _tree(), block=True)
+    assert not mgr.due()
+    fake.now += mgr.interval + 1.0
+    assert mgr.due()
+    # explicit `now` still wins over the injected clock
+    assert not mgr.due(now=fake.now - mgr.interval)
+
+
+def test_failed_background_save_is_captured_and_reraised(tmp_path, monkeypatch):
+    """A background save that fails (even after its one retry) must not
+    be silent: ``saves`` stays put, the interval clock rewinds so the
+    next step re-attempts, and the error surfaces from the next
+    ``wait()``/``maybe_save()`` on the training thread — chained to the
+    original storage exception."""
+    import repro.ckpt.checkpoint as ckpt_mod
+
+    fake = _FakeMonotonic()
+    mgr = CheckpointManager(tmp_path, n_groups=8, redundancy=3, mtbf=300,
+                            t_save=60, t_restart=3600, monotonic=fake,
+                            retry_backoff=0.0)
+    attempts = []
+
+    def boom(directory, step, tree, *, clock=None):
+        attempts.append(step)
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_mod, "save_checkpoint", boom)
+    fake.now += mgr.interval + 1.0        # an interval elapses: save due
+    assert mgr.due()
+    assert mgr.maybe_save(1, _tree(), force=True)      # dispatch succeeds
+    with pytest.raises(RuntimeError, match="background checkpoint save "
+                                           "failed") as ei:
+        mgr.wait()
+    assert isinstance(ei.value.__cause__, OSError)
+    assert attempts == [1, 1]             # original attempt + one retry
+    assert mgr.saves == 0 and mgr.save_failures == 1
+    assert mgr.due(), "failed save must rewind the interval clock"
+    # the error does not re-raise twice, and recovery works: restore the
+    # real writer and the next save commits + counts
+    monkeypatch.setattr(ckpt_mod, "save_checkpoint", save_checkpoint)
+    assert mgr.maybe_save(2, _tree(), force=True, block=True)
+    assert mgr.saves == 1
+    step, _ = mgr.restore_latest(_tree())
+    assert step == 2
+
+
+def test_failed_save_retry_succeeds_transparently(tmp_path, monkeypatch):
+    """One transient failure + a good retry must look like a normal
+    save: committed checkpoint, ``saves`` incremented, no error raised."""
+    import repro.ckpt.checkpoint as ckpt_mod
+
+    real = save_checkpoint
+    calls = []
+
+    def flaky(directory, step, tree, *, clock=None):
+        calls.append(step)
+        if len(calls) == 1:
+            raise OSError("transient")
+        return real(directory, step, tree, clock=clock or time.time)
+
+    monkeypatch.setattr(ckpt_mod, "save_checkpoint", flaky)
+    mgr = CheckpointManager(tmp_path, n_groups=8, redundancy=3, mtbf=300,
+                            t_save=60, t_restart=3600, retry_backoff=0.0)
+    assert mgr.maybe_save(4, _tree(), force=True, block=True)
+    mgr.wait()                            # must not raise
+    assert calls == [4, 4]
+    assert mgr.saves == 1 and mgr.save_failures == 0
+    step, _ = mgr.restore_latest(_tree())
+    assert step == 4
+
+
+def test_restore_reads_parked_old_step_directly(tmp_path):
+    """``restore_checkpoint`` must read a ``.old_step_*`` park even when
+    it is the ONLY copy of the newest step (mid-commit crash), and the
+    next manager init must heal it back to the committed name."""
+    t = _tree()
+    save_checkpoint(tmp_path, 2, t)
+    bumped = jax.tree.map(lambda x: x + 3, t)
+    save_checkpoint(tmp_path, 9, bumped)
+    # crash window: step 9's re-save parked the old copy and died before
+    # committing the replacement
+    (tmp_path / "step_00000009").rename(tmp_path / ".old_step_00000009")
+    (tmp_path / ".tmp_step_00000009").mkdir()
+    step, restored = restore_checkpoint(tmp_path, t)
+    assert step == 9                      # park beats the older step 2
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]) + 3)
+    # explicit-step restore reads the park too
+    step, _ = restore_checkpoint(tmp_path, t, step=9)
+    assert step == 9
+    # next manager init sweeps: park healed, staging leftover gone
+    mgr = CheckpointManager(tmp_path, n_groups=8, redundancy=3, mtbf=300,
+                            t_save=60, t_restart=3600)
+    assert (tmp_path / "step_00000009").is_dir()
+    assert not (tmp_path / ".old_step_00000009").exists()
+    assert not (tmp_path / ".tmp_step_00000009").exists()
+    step, restored = mgr.restore_latest(t)
+    assert step == 9
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]) + 3)

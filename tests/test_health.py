@@ -1,0 +1,584 @@
+"""Gray-failure tier: fail-slow models, straggler detection, demotion.
+
+Layers, bottom-up:
+
+* fail-slow failure models: deterministic episode streams, blast-radius
+  scoping, flaky-link self-healing, the shared one-draw-per-event
+  window drain;
+* injector slow channel: step-window inflation under the sync barrier,
+  demotion removing a straggler's factor from the window max, episode
+  expiry, restart clearing, and — critically — adding a slow channel
+  never perturbing the kill stream's pinned draw order;
+* the online detector: robust flagging within the dwell window,
+  hysteresis (no flap in the dead band), warmup, dead-group handover to
+  fail-stop recovery, and bit-determinism over identical streams;
+* the closed-form degraded-TTT policy and the adaptive scheme's
+  ``decide_degraded`` hook;
+* trainer integration: detector -> demote (pure weight-table edit) ->
+  bit-identical re-admission on heal, plus restart hygiene;
+* serving: detector-weighted routing steers traffic around a flagged
+  replica without dropping requests;
+* (spmd) the demote round trip on the 8-device emulated mesh with both
+  stacking depths pre-warmed: zero run-attributed recompiles.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.state import SpareState
+from repro.des import DESParams, get_scheme
+from repro.health import StragglerDetector, degraded_ttt_estimates
+from repro.scenarios import (FailSlowModel, FlakyLinkModel,
+                             drain_slow_window, model_from_spec)
+from repro.scenarios.topology import ClusterTopology
+from repro.train.injection import ScenarioInjector, ScriptedInjector
+from repro.train.trainer import SpareTrainer, TrainReport
+
+
+# ------------------------------------------------------------------ #
+# fail-slow models                                                   #
+# ------------------------------------------------------------------ #
+def _bound(model, n=8, seed=0, topology=None):
+    rng = np.random.default_rng(seed)
+    model.bind(DESParams(n=n), rng, topology)
+    return model
+
+
+def test_fail_slow_registry_and_episode_shape():
+    m = model_from_spec({"kind": "fail_slow", "mtbs": 100.0,
+                         "factor_min": 2.0, "factor_max": 4.0})
+    assert isinstance(m, FailSlowModel)
+    _bound(m)
+    t = m.next_arrival(0.0, 8, 8)
+    assert t > 0.0
+    groups, factor, until = m.draw_episode(t, set())
+    assert len(groups) == 1 and 0 <= groups[0] < 8
+    assert 2.0 <= factor <= 4.0
+    assert until == math.inf               # persistent until repaired
+    assert m.draw_victims(t, set()) == []  # slow streams never kill
+
+
+def test_fail_slow_stream_is_deterministic():
+    a = _bound(FailSlowModel(mtbs=50.0), seed=3)
+    b = _bound(FailSlowModel(mtbs=50.0), seed=3)
+    slowed_a, slowed_b = set(), set()
+    for _ in range(6):
+        ta, tb = a.next_arrival(0.0, 8, 8), b.next_arrival(0.0, 8, 8)
+        assert ta == tb
+        ea, eb = a.draw_episode(ta, slowed_a), b.draw_episode(tb, slowed_b)
+        assert ea == eb
+        slowed_a.update(ea[0])
+        slowed_b.update(eb[0])
+
+
+def test_fail_slow_scope_slows_whole_blast_radius():
+    topo = ClusterTopology(n_groups=8, hosts_per_group=2, hosts_per_rack=4)
+    m = _bound(FailSlowModel(scope="rack"), topology=topo)
+    groups, _, _ = m.draw_episode(1.0, set())
+    assert len(groups) == 2                # 2 groups/rack in this layout
+    # the seed's whole rack, i.e. an adjacent pair
+    assert sorted(groups) in ([0, 1], [2, 3], [4, 5], [6, 7])
+
+
+def test_flaky_link_episodes_self_heal():
+    m = _bound(FlakyLinkModel(mtbs=100.0, episode_len=30.0), seed=1)
+    groups, factor, until = m.draw_episode(500.0, set())
+    assert 1.5 <= factor <= 3.0
+    assert math.isfinite(until) and until > 500.0
+
+
+def test_drain_slow_window_delivers_in_window_episodes():
+    m = _bound(FailSlowModel(mtbs=10.0), seed=5)
+    slowed: set[int] = set()
+    nxt = m.next_arrival(0.0, 8, 8)
+    episodes, nxt2 = drain_slow_window(m, nxt, nxt + 100.0, slowed)
+    assert episodes, "a 10s-MTBS stream must land events in 100s"
+    for t, groups, factor, until in episodes:
+        assert t <= nxt + 100.0
+        assert set(groups) <= slowed       # drain mutates `slowed`
+        assert factor >= 2.0 and until == math.inf
+    assert nxt2 > nxt + 100.0
+
+
+def test_slow_channel_does_not_perturb_kill_stream():
+    """The slow model runs on its own RNG (seed+1): the kill stream's
+    draw order is pinned regardless of the slow channel."""
+    topo = ClusterTopology(n_groups=8, hosts_per_group=1, hosts_per_rack=2)
+
+    def kills(slow_model):
+        inj = ScenarioInjector({"kind": "poisson", "mtbf": 200.0}, topo,
+                               n_groups=8, seconds_per_step=64.0, seed=9,
+                               slow_model=slow_model)
+        st = SpareState(8, 2)
+        out = []
+        for _ in range(40):
+            for ev in inj.poll(st):
+                out.append((round(ev.time, 9), tuple(ev.victims)))
+        return out, inj
+
+    plain, _ = kills(None)
+    assert plain, "no kills in 40 windows — comparison is vacuous"
+    # an attached-but-idle slow stream (arrivals beyond the horizon)
+    # must leave the kill stream bit-identical: windows, times, victims
+    idle, inj_idle = kills({"kind": "fail_slow", "mtbs": 1e9})
+    assert inj_idle.slow_events_delivered == 0
+    assert plain == idle
+    # an *active* slow stream stretches windows (more sim time per
+    # poll, so later kills re-draw against different drain states —
+    # intended renewal physics, not RNG perturbation): everything up to
+    # the first inflated window must still be bit-identical, and the
+    # slow run must have covered strictly more sim time
+    busy, inj_busy = kills({"kind": "fail_slow", "mtbs": 300.0})
+    assert inj_busy.slow_events_delivered > 0
+    first_inflated = next(
+        i for i, w in enumerate(inj_busy.window_log) if w > 64.0)
+    boundary = 64.0 * first_inflated
+    assert [e for e in busy if e[0] < boundary] == \
+        [e for e in plain if e[0] < boundary]
+    assert inj_busy.clock > 40 * 64.0
+
+
+def test_scenario_injector_rejects_fail_stop_slow_model():
+    with pytest.raises(TypeError):
+        ScenarioInjector({"kind": "poisson"}, None, n_groups=4,
+                         slow_model={"kind": "poisson"})
+
+
+# ------------------------------------------------------------------ #
+# injector slow channel (scripted)                                   #
+# ------------------------------------------------------------------ #
+def test_scripted_slow_window_inflation_and_expiry():
+    inj = ScriptedInjector({}, seconds_per_step=10.0,
+                           slow_schedule={2: [(1, 3.0, 5)]}, n_groups=4)
+    st = SpareState(4, 2)
+    for _ in range(8):
+        inj.poll(st)
+    # windows 2..4 inflate 3x; the episode expires at poll 5
+    assert inj.window_log == [10.0, 10.0, 30.0, 30.0, 30.0,
+                              10.0, 10.0, 10.0]
+    assert inj.clock == sum(inj.window_log)
+
+
+def test_scripted_demotion_removes_factor_from_barrier():
+    inj = ScriptedInjector({}, seconds_per_step=10.0,
+                           slow_schedule={0: [(2, 4.0, None)]}, n_groups=4)
+    st = SpareState(4, 2)
+    inj.poll(st)
+    assert inj.last_step_seconds == 40.0
+    inj.notify_demoted([2])
+    inj.poll(st)
+    assert inj.last_step_seconds == 10.0   # straggler out of the barrier
+    assert inj.slow_factor(2) == 4.0       # still tracked for re-admit
+    np.testing.assert_array_equal(inj.group_step_seconds(),
+                                  [10.0, 10.0, 40.0, 10.0])
+    inj.notify_demoted([2], flag=False)
+    inj.poll(st)
+    assert inj.last_step_seconds == 40.0   # re-admitted, still slow
+
+
+def test_scripted_restart_clears_slow_state():
+    inj = ScriptedInjector({}, seconds_per_step=10.0,
+                           slow_schedule={0: [(0, 5.0, None)]}, n_groups=4)
+    st = SpareState(4, 2)
+    inj.poll(st)
+    inj.notify_demoted([0])
+    inj.notify_outage(100.0, kind="restart")
+    assert inj.slow_factor(0) == 1.0 and not inj.demoted
+    inj.poll(st)
+    assert inj.last_step_seconds == 10.0
+
+
+def test_dead_group_does_not_inflate_window():
+    inj = ScriptedInjector({}, seconds_per_step=10.0,
+                           slow_schedule={0: [(3, 9.0, None)]}, n_groups=4)
+    st = SpareState(4, 2)
+    st.alive[3] = False
+    inj.poll(st)
+    assert inj.last_step_seconds == 10.0
+
+
+# ------------------------------------------------------------------ #
+# detector                                                           #
+# ------------------------------------------------------------------ #
+def _stream(det, slow_group=None, factor=3.0, n=8, steps=12, base=64.0):
+    reports = []
+    for _ in range(steps):
+        x = np.full(n, base)
+        if slow_group is not None:
+            x[slow_group] *= factor
+        reports.append(det.observe(x))
+    return reports
+
+
+def test_detector_flags_within_dwell_window():
+    det = StragglerDetector(8)
+    x = np.full(8, 64.0)
+    for _ in range(4):                     # healthy warm-up
+        det.observe(x)
+    slow = x.copy()
+    slow[2] *= 3.0
+    flagged_at = None
+    for i in range(10):
+        hr = det.observe(slow)
+        if hr.flagged:
+            flagged_at = i
+            break
+    # EWMA(0.4) crosses 1.5x in 2 samples; +min_dwell(3) => flag by ~5
+    assert flagged_at is not None and flagged_at <= det.min_dwell + 2
+    assert det.flagged == (2,)
+    assert det.estimated_factor(2) > 2.0
+
+
+def test_detector_is_deterministic():
+    a = StragglerDetector(8)
+    b = StragglerDetector(8)
+    rng = np.random.default_rng(0)
+    xs = 64.0 * (1.0 + 0.01 * rng.standard_normal((20, 8)))
+    xs[8:, 5] *= 2.5
+    for x in xs:
+        ra, rb = a.observe(x), b.observe(x)
+        assert ra.flagged == rb.flagged
+        np.testing.assert_array_equal(ra.smoothed, rb.smoothed)
+        np.testing.assert_array_equal(ra.zscores, rb.zscores)
+
+
+def test_detector_hysteresis_no_flap_in_dead_band():
+    """A group hovering between clear_factor and flag_factor must hold
+    its current state — neither flag nor clear churn."""
+    det = StragglerDetector(8, ewma_alpha=1.0)
+    _stream(det, slow_group=1, factor=3.0, steps=6)
+    assert det.flagged == (1,)
+    x = np.full(8, 64.0)
+    x[1] *= 1.35        # inside (clear_factor=1.2, flag_factor=1.5)
+    for _ in range(6):
+        hr = det.observe(x)
+        assert hr.flagged == (1,), "dead band must hold the flag"
+    x[1] = 64.0                           # fully healed
+    cleared_at = None
+    for i in range(6):
+        hr = det.observe(x)
+        if not hr.flagged:
+            cleared_at = i
+            break
+    assert cleared_at is not None and cleared_at + 1 >= det.clear_dwell
+    assert hr.newly_cleared == (1,)
+
+
+def test_detector_warmup_suppresses_flags():
+    det = StragglerDetector(8, warmup=4, min_dwell=1)
+    for i in range(4):
+        x = np.full(8, 64.0)
+        x[0] *= 5.0
+        hr = det.observe(x)
+        assert not hr.flagged, f"flagged during warmup at obs {i}"
+    hr = det.observe(x)
+    assert hr.flagged == (0,)
+
+
+def test_detector_dead_group_unflags_immediately():
+    det = StragglerDetector(8, ewma_alpha=1.0)
+    _stream(det, slow_group=3, factor=3.0, steps=6)
+    assert det.flagged == (3,)
+    alive = np.ones(8, bool)
+    alive[3] = False                       # fail-stop took it
+    hr = det.observe(np.full(8, 64.0), alive=alive)
+    assert hr.flagged == () and hr.newly_cleared == (3,)
+
+
+def test_detector_rejects_bad_shapes_and_params():
+    det = StragglerDetector(4)
+    with pytest.raises(ValueError):
+        det.observe(np.ones(5))
+    with pytest.raises(ValueError):
+        StragglerDetector(4, ewma_alpha=0.0)
+    with pytest.raises(ValueError):
+        StragglerDetector(4, flag_z=2.0, clear_z=3.0)
+    with pytest.raises(ValueError):
+        StragglerDetector(4, min_dwell=0)
+
+
+def test_detector_reset_forgets_history():
+    det = StragglerDetector(8, ewma_alpha=1.0)
+    _stream(det, slow_group=0, factor=3.0, steps=6)
+    assert det.flagged
+    det.reset()
+    assert det.flagged == () and det.observations == 0 and not det.reports
+
+
+# ------------------------------------------------------------------ #
+# degraded-TTT policy                                                #
+# ------------------------------------------------------------------ #
+def _factors(n=8, slow=None, factor=3.0):
+    f = np.ones(n)
+    if slow is not None:
+        f[slow] = factor
+    return f
+
+
+def test_policy_demote_wins_on_maskable_straggler():
+    est = degraded_ttt_estimates(
+        factors=_factors(slow=0), candidates=[0], remaining_steps=100,
+        seconds_per_step=64.0, dp_full=8, maskable=True,
+        t_restart=3600.0, t_reshape=60.0)
+    assert est["action"] == "demote"
+    assert est["tolerate_ttt"] == pytest.approx(100 * 64.0 * 3.0)
+    assert est["demote_ttt"] == pytest.approx(100 * 64.0)
+    assert est["max_factor"] == 3.0 and est["surviving_factor"] == 1.0
+
+
+def test_policy_tolerate_wins_when_barely_slow():
+    # 1.05x slowdown: tolerate == R*s*1.05; demote pays nothing less
+    # than R*s but tolerate's TTT ties demote only if factor == 1.0 —
+    # make demote cost a nonzero t_demote so tolerate wins outright
+    est = degraded_ttt_estimates(
+        factors=_factors(slow=0, factor=1.05), candidates=[0],
+        remaining_steps=10, seconds_per_step=1.0, dp_full=8,
+        maskable=True, t_demote=5.0, t_restart=3600.0, t_reshape=60.0)
+    assert est["action"] == "tolerate"
+
+
+def test_policy_tiebreak_is_least_disruptive():
+    # factor exactly 1.0 everywhere: tolerate and demote TTTs tie;
+    # the tie must break toward tolerate (tolerate > demote > ...)
+    est = degraded_ttt_estimates(
+        factors=_factors(), candidates=[0], remaining_steps=10,
+        seconds_per_step=1.0, dp_full=8, maskable=True,
+        t_restart=1e9, t_reshape=1e9)
+    assert est["tolerate_ttt"] == est["demote_ttt"]
+    assert est["action"] == "tolerate"
+
+
+def test_policy_restart_when_unmaskable_and_no_reshape():
+    est = degraded_ttt_estimates(
+        factors=_factors(slow=0, factor=100.0), candidates=[0],
+        remaining_steps=100, seconds_per_step=64.0, dp_full=8,
+        dp_new=0, maskable=False, rollback_steps=5,
+        t_restart=600.0, t_reshape=60.0)
+    assert est["demote_ttt"] == math.inf
+    assert est["reshape_ttt"] == math.inf
+    assert est["action"] == "restart"
+    assert est["restart_ttt"] == pytest.approx(600.0 + 105 * 64.0)
+
+
+def test_policy_reshape_when_unmaskable_but_shrinkable():
+    est = degraded_ttt_estimates(
+        factors=_factors(slow=0, factor=100.0), candidates=[0],
+        remaining_steps=100, seconds_per_step=64.0, dp_full=8,
+        dp_new=4, maskable=False, t_restart=1e9, t_reshape=60.0)
+    assert est["action"] == "reshape"
+    assert est["reshape_ttt"] == pytest.approx(60.0 + 100 * 64.0 * 2.0)
+
+
+def test_policy_demote_respects_demoted_barrier():
+    # group 1 already demoted: its factor must not count toward the
+    # barrier pace, and demoting 0 leaves survivors at 1.0
+    f = _factors(slow=0, factor=3.0)
+    f[1] = 10.0
+    est = degraded_ttt_estimates(
+        factors=f, candidates=[0], remaining_steps=10,
+        seconds_per_step=1.0, dp_full=8, demoted=[1], maskable=True,
+        t_restart=3600.0, t_reshape=60.0)
+    assert est["max_factor"] == 3.0
+    assert est["surviving_factor"] == 1.0
+    assert est["action"] == "demote"
+
+
+def test_adaptive_scheme_decide_degraded_logs():
+    scheme = get_scheme("adaptive", r=2, initial="spare")
+    scheme.prepare(DESParams(n=8))
+    action = scheme.decide_degraded(
+        factors=_factors(slow=0), candidates=[0], remaining_steps=100,
+        seconds_per_step=64.0, dp_full=8, maskable=True,
+        t_restart=3600.0)
+    assert action == "demote"
+    assert scheme.degraded_decisions
+    assert scheme.degraded_decisions[-1]["action"] == "demote"
+
+
+# ------------------------------------------------------------------ #
+# trainer integration                                                #
+# ------------------------------------------------------------------ #
+def test_trainer_demote_and_bit_identical_readmit():
+    """The full gray round trip on the emulation trainer: detector
+    flags the scripted 3x straggler, the policy demotes it (SPARe
+    weight-table edit), and on heal the group is re-admitted with the
+    weight table bit-identical to a never-demoted run."""
+    cfg = smoke_config("qwen2.5-3b").scaled(grad_accum=1)
+    det = StragglerDetector(8)
+    tr = SpareTrainer(cfg, n_groups=8, redundancy=2, seq=32,
+                      per_type_batch=1, total_steps=64, detector=det)
+    inj = ScriptedInjector({}, seconds_per_step=64.0,
+                           slow_schedule={4: [(0, 3.0, 16)]}, n_groups=8)
+    rep = tr.run(32, injector=inj)
+
+    assert rep.steps_done == 32 and rep.wipeouts == 0
+    assert rep.demotes == 1 and rep.readmits == 1
+    dem = next(e for e in rep.events if e.demote)
+    adm = next(e for e in rep.events if e.readmit)
+    assert dem.victims == [0] and dem.slow_factor > 2.0
+    assert dem.s_a_after > dem.s_a_before     # masking went one deeper
+    assert adm.victims == [0] and adm.step > dem.step
+    assert adm.s_a_after == 1
+    # detection latency: slow onset at poll 4, warmup 2 + dwell 3
+    assert dem.step <= 4 + det.warmup + det.min_dwell + 1
+    assert tr.health_log and tr.health_log[0]["action"] == "demote"
+    assert not tr._demoted and tr._demote_snapshot is None
+
+    # bit-identical re-admission (stronger than schedule equality)
+    ref = SpareState(8, 2)
+    np.testing.assert_array_equal(tr.state.stacks, ref.stacks)
+    np.testing.assert_array_equal(tr.state.alive, ref.alive)
+    np.testing.assert_array_equal(tr.state.supplier, ref.supplier)
+    assert int(tr.state.s_a) == 1
+    ref_types, ref_w = ref.device_schedule()
+    got_types, got_w = tr.state.device_schedule()
+    np.testing.assert_array_equal(got_types, ref_types)
+    np.testing.assert_array_equal(got_w, ref_w)
+
+    # the model clock reflects the buy-back: only pre-demotion windows
+    # ran at the straggler's pace
+    slow_windows = sum(1 for w in inj.window_log if w > 64.0)
+    assert slow_windows < 12               # tolerate would pay all 12
+
+
+def test_trainer_tolerates_when_policy_says_so():
+    """An unmaskable straggler set (every group slow) must not demote:
+    the policy tolerates and training continues at the degraded pace."""
+    cfg = smoke_config("qwen2.5-3b").scaled(grad_accum=1)
+    det = StragglerDetector(4, ewma_alpha=1.0, warmup=1, min_dwell=1,
+                            clear_dwell=1)
+    tr = SpareTrainer(cfg, n_groups=4, redundancy=2, seq=32,
+                      per_type_batch=1, total_steps=32, detector=det)
+    # wipe-out set: masking all four groups is infeasible
+    inj = ScriptedInjector(
+        {}, seconds_per_step=64.0,
+        slow_schedule={2: [(g, 3.0, None) for g in range(4)]}, n_groups=4)
+    rep = tr.run(8, injector=inj)
+    assert rep.demotes == 0 and rep.wipeouts == 0
+    assert rep.steps_done == 8
+    # uniform slowdown shifts the median: nobody stands out to flag
+    assert all(h["action"] == "tolerate" for h in tr.health_log)
+
+
+def test_trainer_global_restart_clears_gray_state():
+    cfg = smoke_config("qwen2.5-3b").scaled(grad_accum=1)
+    det = StragglerDetector(8, ewma_alpha=1.0)
+    tr = SpareTrainer(cfg, n_groups=8, redundancy=2, seq=32,
+                      per_type_batch=1, total_steps=64, detector=det)
+    inj = ScriptedInjector({}, seconds_per_step=64.0, n_groups=8)
+    _stream(det, slow_group=0, factor=3.0, steps=6)
+    hr = det.reports[-1]
+    tr._demote([0], hr, inj, TrainReport())
+    assert tr._demoted == {0} and not tr.state.alive[0]
+    ver = tr._schedule_version
+    tr._global_restart()
+    assert not tr._demoted and tr._demote_snapshot is None
+    assert tr.state.alive.all() and int(tr.state.s_a) == 1
+    assert det.observations == 0           # detector history reset
+    assert tr._schedule_version > ver
+
+
+def test_trainer_stale_snapshot_rebuilds_on_readmit():
+    """If another recovery touches the schedule while a group is
+    demoted, the snapshot is stale: re-admission must rebuild from a
+    clean reset and replay the still-dead set, not restore the stale
+    bytes."""
+    cfg = smoke_config("qwen2.5-3b").scaled(grad_accum=1)
+    det = StragglerDetector(8, ewma_alpha=1.0)
+    tr = SpareTrainer(cfg, n_groups=8, redundancy=2, seq=32,
+                      per_type_batch=1, total_steps=64, detector=det)
+    inj = ScriptedInjector({}, seconds_per_step=64.0, n_groups=8)
+    _stream(det, slow_group=2, factor=3.0, steps=6)
+    hr = det.reports[-1]
+    tr._demote([2], hr, inj, TrainReport())
+    # a real failure lands while 2 is demoted
+    tr.scheme.recover(tr.state, [5], step=0)
+    tr._schedule_version += 1
+    tr._readmit([2], hr, inj, TrainReport())
+    st = tr.state
+    st.assert_invariants()
+    assert bool(st.alive[2]) and not bool(st.alive[5])
+    # equivalent to masking 5 on a fresh state
+    ref = SpareState(8, 2)
+    tr.scheme.recover(ref, [5], step=0)
+    np.testing.assert_array_equal(st.stacks, ref.stacks)
+    np.testing.assert_array_equal(st.alive, ref.alive)
+    np.testing.assert_array_equal(st.supplier, ref.supplier)
+    assert int(st.s_a) == int(ref.s_a)
+
+
+# ------------------------------------------------------------------ #
+# serving: detector-weighted routing                                 #
+# ------------------------------------------------------------------ #
+def test_serve_routes_around_flagged_replica():
+    from repro.data import RequestStream
+    from repro.models.model import build_model
+    from repro.serve import ReplicaServer, pool_pages_for
+
+    cfg = smoke_config("qwen2.5-3b")
+    model = build_model(cfg)
+    import jax
+    params = model.init(jax.random.key(0))
+    det = StragglerDetector(3, ewma_alpha=1.0, warmup=1, min_dwell=1,
+                            clear_dwell=1)
+    inj = ScriptedInjector({}, seconds_per_step=1.0,
+                           slow_schedule={0: [(1, 4.0, None)]}, n_groups=3)
+    srv = ReplicaServer(
+        model, params, n_replicas=3, injector=inj, detector=det,
+        engine_kwargs=dict(n_slots=2, page_size=4, max_new=4, buckets=(8,),
+                           n_pages=pool_pages_for(2, 8 + 4, 4)))
+    srv.warmup()
+    for _ in range(3):                     # let the detector flag
+        srv.step()
+    assert det.flagged == (1,)
+    assert srv.weights[1] == 0.0
+    assert srv.weights[0] > 0 and srv.weights[2] > 0
+    assert any(e.kind == "slow" and e.victims == [1] for e in srv.events)
+
+    stream = RequestStream(cfg, buckets=(8,), max_new=4, seed=3)
+    for r in stream.requests(6):
+        srv.submit(r)
+    assert srv.engines[1].pending + srv.engines[1].in_flight == 0, \
+        "requests were routed onto the flagged-slow replica"
+    done = srv.run()
+    assert len(done) == 6 and srv.dropped == 0
+    rep = srv.report()
+    assert rep["flagged_slow"] == [1]
+    assert rep["health_factors"][1] > 2.0
+
+
+# ------------------------------------------------------------------ #
+# spmd: demote round trip on the live mesh, recompiles frozen        #
+# ------------------------------------------------------------------ #
+@pytest.mark.spmd
+def test_mesh_demote_roundtrip_zero_recompiles():
+    """On the 8-device emulated mesh: pre-warm both stacking depths,
+    then run a scripted fail-slow episode through detect -> demote ->
+    re-admit. The entire round trip must be weight-table data — zero
+    run-attributed recompiles — and end bit-identical to healthy."""
+    from repro.exec import MeshExecutor
+
+    cfg = smoke_config("qwen2.5-3b").scaled(grad_accum=1)
+    det = StragglerDetector(8, ewma_alpha=1.0, warmup=1, min_dwell=1,
+                            clear_dwell=1)
+    ex = MeshExecutor(cfg, n_groups=8, redundancy=2, model_degree=1,
+                      seq=32, per_type_batch=2, total_steps=16,
+                      scheme=get_scheme("adaptive", r=2, initial="spare"),
+                      detector=det)
+    ex.prewarm_depths([1, 2])
+    warmed = ex.total_recompiles
+    inj = ScriptedInjector({}, seconds_per_step=64.0,
+                           slow_schedule={2: [(0, 3.0, 7)]}, n_groups=8)
+    rep = ex.run(12, injector=inj, snapshot_every=10)
+    assert rep.steps_done == 12
+    assert rep.demotes == 1 and rep.readmits == 1
+    assert rep.recompiles == 0, "demote round trip recompiled"
+    assert ex.total_recompiles == warmed, "a cache miss slipped through"
+    ref = SpareState(8, 2)
+    np.testing.assert_array_equal(ex.state.stacks, ref.stacks)
+    np.testing.assert_array_equal(ex.state.alive, ref.alive)
+    np.testing.assert_array_equal(ex.state.supplier, ref.supplier)
+    assert int(ex.state.s_a) == 1
+    ex.close()
